@@ -1,0 +1,60 @@
+"""Table 2 analogue: indexing time + index size vs road-network scale.
+
+Columns mirror the paper: BL (border labeling build), Districts
+(shortcut computation + all local indexes), index sizes for BL and the
+district indexes, against the full-PLL baseline (the hub-labeling family
+the paper compares into). Synthetic road networks stand in for the DIMACS
+graphs (same sparsity regime; loader for the real .gr files is in
+core.graph.load_dimacs_gr).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (DistanceOracle, bfs_grow_partition, grid_partition,
+                        grid_road_network, pll, random_geometric_network)
+
+from .common import emit
+
+NETWORKS = [
+    # (name, graph factory, partition factory)
+    ("grid-30x30", lambda: grid_road_network(30, 30, seed=1),
+     lambda g: grid_partition(g, 30, 30, 2, 3)),
+    ("grid-50x50", lambda: grid_road_network(50, 50, seed=2),
+     lambda g: grid_partition(g, 50, 50, 3, 4)),
+    ("geo-4k", lambda: random_geometric_network(4000, seed=3),
+     lambda g: bfs_grow_partition(g, 16, seed=0, refine_iters=4)),
+    ("grid-80x80", lambda: grid_road_network(80, 80, seed=4),
+     lambda g: grid_partition(g, 80, 80, 4, 6)),
+]
+
+PLL_CAP = 3_000  # full PLL baseline only on graphs up to this many vertices
+
+
+def run() -> None:
+    for name, make, make_part in NETWORKS:
+        g = make()
+        part = make_part(g)
+        m = part.num_districts
+        t0 = time.perf_counter()
+        oracle = DistanceOracle.build(g, part)
+        build_s = time.perf_counter() - t0
+        st = oracle.stats
+        emit(f"indexing/{name}/BL", st.bl_seconds * 1e6,
+             f"n={g.num_vertices};m={m};borders={st.num_borders};"
+             f"bl_mb={st.bl_bytes/1e6:.2f}")
+        emit(f"indexing/{name}/Districts", st.districts_seconds * 1e6,
+             f"local_mb={st.local_bytes/1e6:.2f};total_s={build_s:.2f}")
+        if g.num_vertices <= PLL_CAP:
+            t0 = time.perf_counter()
+            full = pll(g)
+            pll_s = time.perf_counter() - t0
+            emit(f"indexing/{name}/PLL-baseline", pll_s * 1e6,
+                 f"pll_mb={full.size_bytes()/1e6:.2f};"
+                 f"speedup_bl={pll_s/max(1e-9, st.bl_seconds):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Kernel shape sweeps: Pallas (interpret) vs jnp reference + projected
+TPU v5e roofline time per call (bytes/flops-derived; CPU wall-time of the
+interpreter is NOT a TPU proxy and is reported only as `interp_us`)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.label_join.kernel import join_pallas
+from repro.kernels.label_join.ref import join_ref
+from repro.kernels.minplus.kernel import minplus_pallas
+from repro.kernels.minplus.ref import minplus_ref
+from repro.kernels.sssp_relax.kernel import floyd_warshall_pallas
+from repro.kernels.sssp_relax.ref import floyd_warshall_ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+from .common import emit, timeit
+
+
+def _proj_us(flops: float, bytes_: float) -> float:
+    # min-plus runs on the VPU: ~1/8 of MXU bf16 peak is a fair ceiling
+    vpu = PEAK_FLOPS_BF16 / 8
+    return max(flops / vpu, bytes_ / HBM_BW) * 1e6
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for m, k, n in [(128, 128, 128), (256, 256, 256), (512, 512, 512)]:
+        a = jnp.asarray(rng.uniform(1, 50, (m, k)).astype(np.float32))
+        b = jnp.asarray(rng.uniform(1, 50, (k, n)).astype(np.float32))
+        _, ref_s = timeit(lambda: minplus_ref(a, b).block_until_ready())
+        _, int_s = timeit(lambda: minplus_pallas(
+            a, b, interpret=True).block_until_ready(), repeats=1)
+        flops = 2.0 * m * n * k
+        bytes_ = 4.0 * (m * k + k * n + m * n)
+        emit(f"kernels/minplus-{m}x{k}x{n}", _proj_us(flops, bytes_),
+             f"xla_ref_us={ref_s*1e6:.1f};interp_us={int_s*1e6:.1f}")
+
+    for q, h in [(1024, 512), (8192, 1024)]:
+        s = jnp.asarray(rng.uniform(1, 50, (q, h)).astype(np.float32))
+        t = jnp.asarray(rng.uniform(1, 50, (q, h)).astype(np.float32))
+        _, ref_s = timeit(lambda: join_ref(s, t).block_until_ready())
+        _, int_s = timeit(lambda: join_pallas(
+            s, t, interpret=True).block_until_ready(), repeats=1)
+        bytes_ = 4.0 * (2 * q * h + q)
+        emit(f"kernels/label_join-{q}x{h}", _proj_us(2.0 * q * h, bytes_),
+             f"xla_ref_us={ref_s*1e6:.1f};interp_us={int_s*1e6:.1f}")
+
+    for nn in (128, 256):
+        adj = rng.uniform(1, 50, (nn, nn)).astype(np.float32)
+        adj[rng.random((nn, nn)) < 0.8] = np.inf
+        adj = np.minimum(adj, adj.T)
+        aj = jnp.asarray(adj)
+        _, ref_s = timeit(lambda: floyd_warshall_ref(
+            aj).block_until_ready(), repeats=1)
+        _, int_s = timeit(lambda: floyd_warshall_pallas(
+            aj, bk=64, interpret=True).block_until_ready(), repeats=1)
+        flops = 2.0 * nn ** 3
+        bytes_ = 4.0 * 3 * nn * nn * (nn / 64)
+        emit(f"kernels/floyd_warshall-{nn}", _proj_us(flops, bytes_),
+             f"xla_ref_us={ref_s*1e6:.1f};interp_us={int_s*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run()

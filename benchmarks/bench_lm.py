@@ -1,0 +1,36 @@
+"""LM substrate micro-bench: CPU tokens/s for a reduced config (harness
+health check — real perf numbers come from the dry-run roofline)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import init_params
+from repro.train.data import DataConfig, synthetic_batch
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    cfg = get_smoke_config("qwen3_4b").reduced(num_layers=4, ce_chunk=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    dcfg = DataConfig(seq_len=256, global_batch=8, seed=0)
+    batch = synthetic_batch(cfg, dcfg, 0)
+    step = jax.jit(make_train_step(cfg, OptimizerConfig()))
+
+    def one():
+        p2, o2, m = step(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        return m
+
+    _, sec = timeit(one, repeats=3, warmup=1)
+    toks = dcfg.seq_len * dcfg.global_batch
+    emit("lm/train-step-smoke", sec * 1e6,
+         f"tokens_per_s={toks/sec:,.0f};params={cfg.param_count():,}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""§Perf (paper technique): border-table placement on the device mesh.
+
+Hypothesis: replicating B (the computing center) costs n·q·4 bytes per
+device but answers rule-3 queries with zero collectives; row-sharding B
+over the edge axis cuts memory by the device count but every cross-
+district query must fetch two q-wide rows across shards. This experiment
+compiles both layouts on an 8-device host mesh and reports per-device
+index bytes + collective bytes per 4096-query batch from the optimized
+HLO — the crossover rule (replicate while n·q·4 « HBM) goes to DESIGN.md.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import re, json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import DistanceOracle, bfs_grow_partition, grid_road_network
+
+g = grid_road_network(24, 24, seed=3)
+part = bfs_grow_partition(g, 8, seed=0)
+oracle = DistanceOracle.build(g, part)
+bt = oracle.border_labels.table.astype(np.float32)
+n, q = bt.shape
+pad = (-n) % 8
+if pad:
+    bt = np.pad(bt, ((0, pad), (0, 0)), constant_values=np.inf)
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("edge",))
+Q = 4096
+rng = np.random.default_rng(0)
+ss = jnp.asarray(rng.integers(0, n, size=Q))
+ts = jnp.asarray(rng.integers(0, n, size=Q))
+
+def query(table, s, t):
+    return jnp.min(table[s] + table[t], axis=1)
+
+out = {}
+for name, spec in (("replicated", P()), ("row-sharded", P("edge"))):
+    sh = NamedSharding(mesh, spec)
+    rep = NamedSharding(mesh, P())
+    j = jax.jit(query, in_shardings=(sh, rep, rep), out_shardings=rep)
+    comp = j.lower(jax.ShapeDtypeStruct(bt.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(ss.shape, ss.dtype),
+                   jax.ShapeDtypeStruct(ts.shape, ts.dtype)).compile()
+    hlo = comp.as_text()
+    coll = 0
+    for line in hlo.splitlines():
+        m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)\b", line)
+        if m:
+            sm = re.findall(r"(f32|s32|u32|pred)\[([0-9,]*)\]",
+                            line.split("=", 1)[0])
+            for dt, dims in sm:
+                nelem = 1
+                for d in dims.split(","):
+                    if d:
+                        nelem *= int(d)
+                coll += nelem * 4
+    mem = comp.memory_analysis()
+    out[name] = {"arg_mb": mem.argument_size_in_bytes / 1e6,
+                 "coll_mb": coll / 1e6}
+print(json.dumps({"n": int(n), "q": int(q), **out}))
+"""
+
+
+def run() -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        ["src"] + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", CODE], env=env,
+                         capture_output=True, text=True, timeout=560,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-1500:])
+    import json
+    line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    r = json.loads(line)
+    for name in ("replicated", "row-sharded"):
+        emit(f"oracle-sharding/{name}",
+             r[name]["coll_mb"] * 1e3,  # KB collectives per 4k queries
+             f"arg_mb_per_dev={r[name]['arg_mb']:.2f};n={r['n']};q={r['q']}"
+             f";col2=coll_kb_per_4k_queries")
+
+
+if __name__ == "__main__":
+    run()

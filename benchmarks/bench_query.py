@@ -1,0 +1,52 @@
+"""Fig. 5 analogue: per-query response time.
+
+Hub-labeling methods (ours = BL + district L_i⁺) answer in microseconds;
+online bidirectional Dijkstra is the millisecond-level baseline family.
+Batched joins (the TPU serving layout) are reported separately — that's
+the number the edge deployment actually serves at.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (DistanceOracle, bidirectional_dijkstra,
+                        grid_partition, grid_road_network, pll)
+
+from .common import emit, timeit
+
+NUM_QUERIES = 10_000
+BIDIJ_QUERIES = 50
+
+
+def run() -> None:
+    g = grid_road_network(50, 50, seed=7)
+    part = grid_partition(g, 50, 50, 3, 4)
+    oracle = DistanceOracle.build(g, part)
+    full = pll(g)
+    rng = np.random.default_rng(1)
+    ss = rng.integers(0, g.num_vertices, size=NUM_QUERIES)
+    ts = rng.integers(0, g.num_vertices, size=NUM_QUERIES)
+
+    _, sec = timeit(lambda: oracle.query_many(ss, ts), repeats=3)
+    emit("query/ours-BL-batched", sec / NUM_QUERIES * 1e6,
+         f"n={g.num_vertices};q={NUM_QUERIES}")
+
+    sel = rng.integers(0, NUM_QUERIES, size=500)
+    _, sec = timeit(lambda: [oracle.query(int(ss[i]), int(ts[i]))
+                             for i in sel], repeats=2)
+    emit("query/ours-BL-single", sec / len(sel) * 1e6, "per-call python")
+
+    _, sec = timeit(lambda: full.query_many(ss, ts), repeats=3)
+    emit("query/PLL-batched", sec / NUM_QUERIES * 1e6,
+         f"labels_mb={full.size_bytes()/1e6:.2f}")
+
+    _, sec = timeit(lambda: [bidirectional_dijkstra(g, int(ss[i]),
+                                                    int(ts[i]))
+                             for i in range(BIDIJ_QUERIES)], repeats=1,
+                    warmup=0)
+    emit("query/BiDijkstra", sec / BIDIJ_QUERIES * 1e6,
+         "online-search baseline")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
+    """Returns (result, best_seconds)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results JSON.
+
+    PYTHONPATH=src python -m benchmarks.report [--dryrun results/dryrun.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return {}
+
+
+def dryrun_table(cells: dict) -> str:
+    rows = ["| arch | shape | mesh | peak MB/dev | fits 16GB | compile s |"
+            " collectives | coll MB (scan-visible) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(cells):
+        c = cells[key]
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | "
+                        f"SKIP: {c['skipped']} | — |")
+            continue
+        if "error" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | {c.get('mesh')} |"
+                        f" ERROR | — | — | {c['error'][:60]} | — |")
+            continue
+        coll = c["collectives"]
+        coll_mb = sum(v for k, v in coll.items() if k != "count") / 1e6
+        fits = "yes" if c["peak_mb_per_dev"] < 16_000 else "NO"
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{c['peak_mb_per_dev']:,.0f} | {fits} | {c['compile_s']} | "
+            f"{coll['count']} | {coll_mb:,.1f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells: dict) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPS | useful ratio | MFU bound |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(cells):
+        c = cells[key]
+        if "skipped" in c or "error" in c:
+            continue
+        mfu = c["model_flops"] / c["hlo_flops"] * c["compute_s"] \
+            / c["step_time_bound_s"] if c["hlo_flops"] else 0
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']*1e3:.2f}ms | "
+            f"{c['memory_s']*1e3:.2f}ms | {c['collective_s']*1e3:.2f}ms | "
+            f"**{c['dominant']}** | {c['model_flops']:.2e} | "
+            f"{c['useful_flops_ratio']:.2f} | {mfu:.2f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--roofline", default="results/roofline.json")
+    args = ap.parse_args()
+    dr = load(args.dryrun)
+    if dr:
+        print("## §Dry-run\n")
+        print(dryrun_table(dr))
+    rf = load(args.roofline)
+    if rf:
+        print("\n## §Roofline\n")
+        print(roofline_table(rf))
+
+
+if __name__ == "__main__":
+    main()

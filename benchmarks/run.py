@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--only <prefix>`` filters.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="prefix filter")
+    args = ap.parse_args()
+
+    from . import (bench_edge, bench_indexing, bench_kernels, bench_lm,
+                   bench_oracle_sharding, bench_query)
+    suites = {
+        "indexing": bench_indexing.run,   # Table 2
+        "query": bench_query.run,         # Fig. 5
+        "edge": bench_edge.run,           # §5 dynamic scenario
+        "kernels": bench_kernels.run,
+        "lm": bench_lm.run,
+        "oracle_sharding": bench_oracle_sharding.run,  # §Perf (paper side)
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if args.only and not name.startswith(args.only):
+            continue
+        try:
+            fn()
+        except Exception:    # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution (Border Labeling + districts +
+local bound + query routing) with both reference (numpy) and TPU-adapted
+(dense min-plus / JAX) builders."""
+from .graph import (Graph, from_edges, grid_road_network,
+                    random_geometric_network, load_dimacs_gr, dijkstra, perturb_weights,
+                    bidirectional_dijkstra, all_pairs_dijkstra, is_connected)
+from .labels import SparseLabels, BorderLabels, pack_sparse
+from .ordering import degree_order, rank_of
+from .partition import Partition, bfs_grow_partition, grid_partition, \
+    borders_of, border_mask
+from .pll import pll, pll_subgraph
+from .border_labeling import (build_border_labels_reference,
+                              build_border_labels_hierarchical,
+                              minplus, minplus_closure)
+from .shortcuts import border_shortcut_matrix, shortcut_edges
+from .local_index import LocalIndex, build_local_index, \
+    build_all_local_indexes
+from .query import (Rule, route, cross_district_query, same_district_query,
+                    local_bound, certified_local_query, query_batch)
+from .oracle import DistanceOracle, BuildStats
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,79 @@
+"""Per-district local indexes L_i (plain) and L_i⁺ (shortcut-augmented).
+
+An edge server owns one LocalIndex: labels in local vertex numbering plus
+the maps back to global ids. ``plain`` labels (no shortcuts) are what the
+server can build *by itself* from its own district subgraph — they power
+the Local Bound fallback (Theorem 3) while the computing center is still
+rebuilding B. ``augmented`` labels additionally fold in the Border
+Auxiliary Shortcuts pushed down by the center and answer same-district
+queries globally-exactly (Theorem 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import Graph
+from .labels import BorderLabels, SparseLabels
+from .partition import Partition, borders_of
+from .pll import pll_subgraph
+from .shortcuts import border_shortcut_matrix, shortcut_edges
+
+INF = np.float32(np.inf)
+
+
+@dataclass
+class LocalIndex:
+    district_id: int
+    vertices: np.ndarray        # (k,) int32 global ids, ascending
+    border_locals: np.ndarray   # (b,) int64 positions of borders
+    labels: SparseLabels        # L_i⁺ if augmented else L_i (local ids)
+    augmented: bool
+    # distances from every local vertex to every district border, via the
+    # local labels only — precomputed once, powers LB in O(b) per endpoint
+    border_dist: np.ndarray = field(default=None)  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.border_dist is None:
+            k = len(self.vertices)
+            b = len(self.border_locals)
+            bd = np.full((k, b), INF, dtype=np.float32)
+            for j, bloc in enumerate(self.border_locals):
+                bd[:, j] = self.labels.query_many(
+                    np.arange(k), np.full(k, int(bloc)))
+            self.border_dist = bd
+
+    def local_of(self, global_ids: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.vertices, global_ids)
+
+    def query_local(self, s_local: int, t_local: int) -> float:
+        return self.labels.query(s_local, t_local)
+
+    def size_bytes(self) -> int:
+        return self.labels.size_bytes()
+
+
+def build_local_index(g: Graph, part: Partition, district_id: int,
+                      bl: BorderLabels | None = None) -> LocalIndex:
+    """Build L_i (bl=None) or L_i⁺ (bl given → shortcuts folded in)."""
+    vertices = np.nonzero(part.assignment == np.int32(district_id))[0] \
+        .astype(np.int32)
+    district_borders = borders_of(g, part)[district_id]
+    pos = {int(v): i for i, v in enumerate(vertices)}
+    border_locals = np.array([pos[int(b)] for b in district_borders],
+                             dtype=np.int64)
+    extra = None
+    if bl is not None and len(district_borders) > 1:
+        sc = border_shortcut_matrix(bl, district_borders)
+        extra = shortcut_edges(border_locals, sc)
+    labels, verts = pll_subgraph(g, vertices, extra_edges=extra)
+    return LocalIndex(district_id, verts, border_locals, labels,
+                      augmented=bl is not None)
+
+
+def build_all_local_indexes(g: Graph, part: Partition,
+                            bl: BorderLabels | None = None
+                            ) -> list[LocalIndex]:
+    return [build_local_index(g, part, i, bl=bl)
+            for i in range(part.num_districts)]

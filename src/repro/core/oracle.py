@@ -1,0 +1,90 @@
+"""DistanceOracle — the user-facing API tying the whole index together.
+
+``DistanceOracle.build`` reproduces the paper's two-phase construction and
+reports the two Table-2 timing columns separately:
+
+  * BL        — time to build the border labels B (Algorithm 1);
+  * Districts — cumulative time to compute every district's auxiliary
+                shortcuts from B *plus* building all local indexes L_i⁺.
+
+Queries follow §4.2 routing: same-district → L_i⁺ (Theorem 2), otherwise →
+B (Theorem 1).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .border_labeling import (build_border_labels_hierarchical,
+                              build_border_labels_reference)
+from .graph import Graph
+from .labels import BorderLabels
+from .local_index import LocalIndex, build_all_local_indexes
+from .partition import Partition
+from .query import query_batch
+
+INF = np.float32(np.inf)
+
+
+@dataclass
+class BuildStats:
+    bl_seconds: float = 0.0
+    districts_seconds: float = 0.0
+    bl_bytes: int = 0
+    local_bytes: int = 0
+    num_borders: int = 0
+
+    def as_row(self) -> dict:
+        return {
+            "bl_s": round(self.bl_seconds, 4),
+            "districts_s": round(self.districts_seconds, 4),
+            "bl_mb": round(self.bl_bytes / 1e6, 3),
+            "local_mb": round(self.local_bytes / 1e6, 3),
+            "borders": self.num_borders,
+        }
+
+
+@dataclass
+class DistanceOracle:
+    graph: Graph
+    partition: Partition
+    border_labels: BorderLabels
+    local_indexes: list[LocalIndex]
+    stats: BuildStats = field(default_factory=BuildStats)
+
+    @classmethod
+    def build(cls, g: Graph, part: Partition,
+              builder: str = "reference") -> "DistanceOracle":
+        t0 = time.perf_counter()
+        if builder == "reference":
+            bl = build_border_labels_reference(g, part)
+        elif builder == "hierarchical":
+            bl = build_border_labels_hierarchical(g, part)
+        else:
+            raise ValueError(f"unknown builder {builder!r}")
+        t1 = time.perf_counter()
+        locals_ = build_all_local_indexes(g, part, bl=bl)
+        t2 = time.perf_counter()
+        stats = BuildStats(
+            bl_seconds=t1 - t0,
+            districts_seconds=t2 - t1,
+            bl_bytes=bl.size_bytes(),
+            local_bytes=sum(li.size_bytes() for li in locals_),
+            num_borders=bl.num_borders,
+        )
+        return cls(g, part, bl, locals_, stats)
+
+    def query(self, s: int, t: int) -> float:
+        return float(self.query_many(np.array([s]), np.array([t]))[0])
+
+    def query_many(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        return query_batch(self.border_labels, self.local_indexes,
+                           self.partition.assignment, ss, ts)
+
+    def rebuild(self, new_weights: np.ndarray,
+                builder: str = "reference") -> "DistanceOracle":
+        """Full re-index after a traffic update (the computing-center job)."""
+        return DistanceOracle.build(self.graph.with_weights(new_weights),
+                                    self.partition, builder=builder)

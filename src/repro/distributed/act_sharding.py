@@ -1,0 +1,126 @@
+"""Activation-sharding context.
+
+The model code is mesh-agnostic; the launcher installs an
+``ActivationSharding`` describing where batch / sequence / hidden live,
+and ``constrain`` pins activations at block boundaries. Without explicit
+constraints the SPMD partitioner can lose the batch sharding through the
+embedding gather and replicate attention activations (observed: 2 GB
+score buffers per device on the 16x16 mesh).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclass(frozen=True)
+class ActivationSharding:
+    mesh: Mesh
+    batch_axes: tuple | str | None      # e.g. ("pod", "data")
+    model_axis: str | None = "model"
+    seq_axes: tuple | str | None = None  # set for sequence parallelism
+
+    def spec_hidden(self, ndim: int) -> P:
+        """(B, S, D)-style activations: batch sharded, rest replicated."""
+        return P(self.batch_axes, *([None] * (ndim - 1)))
+
+    def spec_seq(self, ndim: int) -> P:
+        """Sequence-parallel regions: (B, S, D) with S sharded."""
+        return P(self.batch_axes, self.seq_axes or self.model_axis,
+                 *([None] * (ndim - 2)))
+
+
+@contextlib.contextmanager
+def activation_sharding(ctx: ActivationSharding | None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current() -> ActivationSharding | None:
+    return getattr(_STATE, "ctx", None)
+
+
+def constrain_tp(x: jax.Array, dim: int) -> jax.Array:
+    """Shard dimension ``dim`` over the model axis (batch over dp axes) —
+    the explicit tensor-parallel pin for MLP hidden / attention heads."""
+    ctx = current()
+    if ctx is None or ctx.batch_axes is None or ctx.model_axis is None:
+        return x
+    if x.shape[dim] % ctx.mesh.shape[ctx.model_axis] != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = ctx.batch_axes
+    spec[dim] = ctx.model_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def constrain_rows(x: jax.Array) -> jax.Array:
+    """Shard dim 0 (a token-major flat dim) over the data axes — pins the
+    MoE dispatch intermediates, which otherwise replicate because the
+    argsort/gather chain defeats sharding propagation."""
+    ctx = current()
+    if ctx is None or ctx.batch_axes is None:
+        return x
+    names = (ctx.batch_axes,) if isinstance(ctx.batch_axes, str) \
+        else ctx.batch_axes
+    n = 1
+    for a in names:
+        n *= ctx.mesh.shape[a]
+    if x.shape[0] % n != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh,
+                         P(ctx.batch_axes, *([None] * (x.ndim - 1)))))
+
+
+def constrain_matrix(x: jax.Array) -> jax.Array:
+    """Pin a (D_in, D_out) matrix cotangent to the FSDP×TP weight layout
+    (used on manually-computed weight grads, e.g. the chunked-CE dW)."""
+    ctx = current()
+    if ctx is None or ctx.batch_axes is None or x.ndim != 2:
+        return x
+    fsdp = ctx.batch_axes
+    names = (fsdp,) if isinstance(fsdp, str) else fsdp
+    n = 1
+    for a in names:
+        n *= ctx.mesh.shape[a]
+    d0 = fsdp if x.shape[0] % n == 0 else None
+    d1 = ctx.model_axis if (ctx.model_axis and x.shape[1]
+                            % ctx.mesh.shape[ctx.model_axis] == 0) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(d0, d1)))
+
+
+def constrain(x: jax.Array, kind: str = "hidden") -> jax.Array:
+    """Pin an activation to the installed layout (no-op when unset).
+
+    kind="seq" shards the sequence dim over the model axis (sequence
+    parallelism) — used on the layer-scan carry so the per-layer saved
+    residuals (L, B, S, D) shrink by the TP degree; it falls back to the
+    batch-only layout when S doesn't divide.
+    """
+    ctx = current()
+    if ctx is None or ctx.batch_axes is None:
+        return x
+    if kind == "seq" and x.ndim >= 3:
+        axes = ctx.seq_axes or ctx.model_axis
+        names = (axes,) if isinstance(axes, str) else axes
+        size = 1
+        for a in names:
+            size *= ctx.mesh.shape[a]
+        if x.shape[1] % size == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(ctx.mesh, ctx.spec_seq(x.ndim)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, ctx.spec_hidden(x.ndim)))

@@ -1,0 +1,14 @@
+"""Edge-computing runtime: center + edge servers (§4), discrete-event
+latency simulator (§5 dynamic scenario), and the districts→devices
+shard_map deployment."""
+from .topology import LatencyModel, Topology
+from .center import ComputingCenter
+from .server import EdgeServer
+from .router import EdgeSystem
+from .simulator import (QueryEvent, SimResult, UpdateSchedule, make_trace,
+                        simulate_centralized, simulate_edge)
+from .sharded_oracle import (ShardedOracleData, pack_for_mesh,
+                             prepare_queries, make_sharded_query_fn,
+                             sharded_query)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,59 @@
+"""Computing center (§4.2): owns the border labels B, rebuilds them each
+traffic epoch, answers rule-3 (cross-district) queries, forwards rule-2
+queries, and pushes Border Auxiliary Shortcuts down to the edge servers.
+
+Index versions are double-buffered: while version k+1 is building, version
+k keeps serving (the paper instead lets edge servers fall back to the
+Local Bound — both policies are modeled; see simulator.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.border_labeling import build_border_labels_reference
+from ..core.graph import Graph
+from ..core.labels import BorderLabels
+from ..core.partition import Partition, borders_of
+from ..core.shortcuts import border_shortcut_matrix
+
+
+@dataclass
+class ComputingCenter:
+    graph: Graph
+    partition: Partition
+    border_labels: BorderLabels | None = None
+    version: int = 0
+    last_build_seconds: float = 0.0
+    _shortcut_cache: dict[int, np.ndarray] = field(default_factory=dict)
+
+    def rebuild(self, new_weights: np.ndarray | None = None) -> float:
+        """Rebuild B from fresh edge weights; returns build seconds."""
+        if new_weights is not None:
+            self.graph = self.graph.with_weights(new_weights)
+        t0 = time.perf_counter()
+        self.border_labels = build_border_labels_reference(
+            self.graph, self.partition)
+        self.last_build_seconds = time.perf_counter() - t0
+        self.version += 1
+        self._shortcut_cache.clear()
+        return self.last_build_seconds
+
+    def shortcuts_for(self, district_id: int) -> np.ndarray:
+        """Border Auxiliary Shortcuts pushed to one edge server."""
+        assert self.border_labels is not None, "rebuild() first"
+        if district_id not in self._shortcut_cache:
+            b = borders_of(self.graph, self.partition)[district_id]
+            self._shortcut_cache[district_id] = border_shortcut_matrix(
+                self.border_labels, b)
+        return self._shortcut_cache[district_id]
+
+    def answer_cross(self, s: int, t: int) -> float:
+        assert self.border_labels is not None
+        return self.border_labels.query(s, t)
+
+    def answer_cross_many(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        assert self.border_labels is not None
+        return self.border_labels.query_many(ss, ts)

@@ -1,0 +1,88 @@
+"""System facade: center + all edge servers + §4.2 routing, version-aware.
+
+``EdgeSystem`` is the functional model of the deployment (the discrete-
+event simulator adds time on top; the sharded_oracle maps the same logic
+onto a device mesh).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.partition import Partition
+from ..core.query import Rule, route
+from .center import ComputingCenter
+from .server import EdgeServer
+
+INF = np.float32(np.inf)
+
+
+@dataclass
+class EdgeSystem:
+    graph: Graph
+    partition: Partition
+    center: ComputingCenter
+    servers: list[EdgeServer]
+    stats: dict = field(default_factory=lambda: {
+        "rule1": 0, "rule2": 0, "rule3": 0, "lb_certified": 0,
+        "lb_fallback_attempts": 0})
+
+    @classmethod
+    def deploy(cls, g: Graph, part: Partition) -> "EdgeSystem":
+        center = ComputingCenter(g, part)
+        center.rebuild()
+        servers = [EdgeServer.bootstrap(g, part, i)
+                   for i in range(part.num_districts)]
+        for s in servers:
+            s.install_shortcuts(g, part, center.shortcuts_for(s.district_id),
+                                center.version)
+        return cls(g, part, center, servers)
+
+    def apply_traffic_update(self, new_weights: np.ndarray) -> dict:
+        """Full update cycle: edge servers refresh local indexes, center
+        rebuilds B, shortcuts are pushed back down. Returns timings."""
+        g2 = self.graph.with_weights(new_weights)
+        self.graph = g2
+        local_s = [srv.refresh_local(g2, self.partition)
+                   for srv in self.servers]
+        bl_s = self.center.rebuild(new_weights)
+        shortcut_s = [srv.install_shortcuts(
+            g2, self.partition, self.center.shortcuts_for(srv.district_id),
+            self.center.version) for srv in self.servers]
+        return {"local_refresh_s": local_s, "bl_rebuild_s": bl_s,
+                "shortcut_install_s": shortcut_s}
+
+    def query(self, s: int, t: int, client_district: int | None = None
+              ) -> tuple[float, Rule]:
+        ds = int(self.partition.assignment[s])
+        dt = int(self.partition.assignment[t])
+        client = ds if client_district is None else client_district
+        rule = route(ds, dt, client)
+        if rule == Rule.CROSS:
+            self.stats["rule3"] += 1
+            return float(self.center.answer_cross(s, t)), rule
+        server = self.servers[ds]
+        self.stats["rule1" if rule == Rule.LOCAL else "rule2"] += 1
+        exact = server.answer_exact(s, t)
+        if exact is not None:
+            return exact, rule
+        # shortcuts not installed (rebuild window): Theorem-3 fallback
+        self.stats["lb_fallback_attempts"] += 1
+        lam, ok = server.answer_certified(s, t)
+        if ok:
+            self.stats["lb_certified"] += 1
+            return lam, rule
+        # uncertified: the query must wait for the shortcut push (the
+        # simulator charges the wait; functionally we install now)
+        server.install_shortcuts(self.graph, self.partition,
+                                 self.center.shortcuts_for(ds),
+                                 self.center.version)
+        exact = server.answer_exact(s, t)
+        assert exact is not None
+        return exact, rule
+
+    def query_many(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        return np.array([self.query(int(s), int(t))[0]
+                         for s, t in zip(ss, ts)], dtype=np.float32)

@@ -1,0 +1,95 @@
+"""Edge server (§4.2): owns one district, builds its own plain local index
+L_i from the district subgraph, and upgrades it to L_i⁺ once the computing
+center pushes the Border Auxiliary Shortcuts for the current version.
+
+While its L_i⁺ is stale (center still rebuilding), the server answers
+same-district queries through the Local Bound certificate (Theorem 3);
+uncertified queries are deferred to the center's double-buffered index (or
+queued, in the paper's strictest reading — the simulator models both).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.local_index import LocalIndex
+from ..core.partition import Partition, borders_of
+from ..core.pll import pll_subgraph
+from ..core.query import local_bound
+from ..core.shortcuts import shortcut_edges
+
+
+@dataclass
+class EdgeServer:
+    district_id: int
+    plain: LocalIndex                 # L_i  (self-built, always available)
+    augmented: LocalIndex | None = None   # L_i⁺ (needs center shortcuts)
+    augmented_version: int = -1
+    last_build_seconds: float = 0.0
+
+    @classmethod
+    def bootstrap(cls, g: Graph, part: Partition,
+                  district_id: int) -> "EdgeServer":
+        t0 = time.perf_counter()
+        plain = _build_plain(g, part, district_id)
+        server = cls(district_id, plain)
+        server.last_build_seconds = time.perf_counter() - t0
+        return server
+
+    def refresh_local(self, g: Graph, part: Partition) -> float:
+        """Rebuild L_i from freshly collected district traffic."""
+        t0 = time.perf_counter()
+        self.plain = _build_plain(g, part, self.district_id)
+        self.augmented = None          # shortcuts are stale now
+        self.last_build_seconds = time.perf_counter() - t0
+        return self.last_build_seconds
+
+    def install_shortcuts(self, g: Graph, part: Partition,
+                          shortcut_matrix: np.ndarray, version: int
+                          ) -> float:
+        """Fold the center's shortcuts into L_i⁺ (Theorem 2 activation)."""
+        t0 = time.perf_counter()
+        vertices = self.plain.vertices
+        extra = shortcut_edges(self.plain.border_locals, shortcut_matrix)
+        labels, verts = pll_subgraph(g, vertices, extra_edges=extra)
+        self.augmented = LocalIndex(self.district_id, verts,
+                                    self.plain.border_locals, labels,
+                                    augmented=True)
+        self.augmented_version = version
+        dt = time.perf_counter() - t0
+        self.last_build_seconds = dt
+        return dt
+
+    # -- query paths --------------------------------------------------------
+
+    def answer_exact(self, s: int, t: int) -> float | None:
+        """Rule-1 answer via L_i⁺; None if shortcuts not installed yet."""
+        if self.augmented is None:
+            return None
+        idx = self.augmented
+        sl = int(idx.local_of(np.array([s]))[0])
+        tl = int(idx.local_of(np.array([t]))[0])
+        return float(idx.query_local(sl, tl))
+
+    def answer_certified(self, s: int, t: int) -> tuple[float, bool]:
+        """Theorem-3 path via plain L_i + Local Bound."""
+        idx = self.plain
+        sl = int(idx.local_of(np.array([s]))[0])
+        tl = int(idx.local_of(np.array([t]))[0])
+        lam = idx.query_local(sl, tl)
+        lb = local_bound(idx, sl, tl)
+        return float(lam), bool(lam <= lb)
+
+
+def _build_plain(g: Graph, part: Partition, district_id: int) -> LocalIndex:
+    vertices = np.nonzero(part.assignment == np.int32(district_id))[0] \
+        .astype(np.int32)
+    b = borders_of(g, part)[district_id]
+    pos = {int(v): i for i, v in enumerate(vertices)}
+    border_locals = np.array([pos[int(x)] for x in b], dtype=np.int64)
+    labels, verts = pll_subgraph(g, vertices)
+    return LocalIndex(district_id, verts, border_locals, labels,
+                      augmented=False)

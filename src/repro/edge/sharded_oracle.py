@@ -1,0 +1,142 @@
+"""Districts → devices: the edge deployment mapped onto a JAX mesh.
+
+Every device of the ``edge`` mesh axis plays the role of a group of edge
+servers: it owns ``ceil(m / E)`` districts' local indexes (padded to a
+common shape and sharded over the axis), while the border-label table B —
+the computing center — is replicated. A query batch is preprocessed on the
+host into (district, local-id) coordinates, then answered in one
+``shard_map`` call:
+
+  rule 1/2 — the owning device joins the query against its local sparse
+             labels (kernels/label_join semantics);
+  rule 3   — the device owning the source district joins the replicated B
+             rows (load-balanced center);
+
+and a single ``pmin`` over the axis assembles the answer vector. This is
+the §4.2 routing with collectives instead of RPCs; the same function runs
+on 1 device (tests), 8 host devices (integration test), or a pod axis.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.labels import BorderLabels
+from ..core.local_index import LocalIndex
+from ..core.partition import Partition
+
+INF = np.float32(np.inf)
+
+
+@dataclass
+class ShardedOracleData:
+    """Host-packed arrays. Leading axis = m_pad districts (device-shardable)."""
+    local_hubs: np.ndarray    # (m_pad, kmax, L) int32, -1 pad
+    local_dists: np.ndarray   # (m_pad, kmax, L) f32, inf pad
+    btable: np.ndarray        # (n, q) f32 replicated
+    num_devices: int
+    num_districts: int
+
+    @property
+    def districts_per_device(self) -> int:
+        return self.local_hubs.shape[0] // self.num_devices
+
+
+def pack_for_mesh(part: Partition, bl: BorderLabels,
+                  locals_: list[LocalIndex], num_devices: int
+                  ) -> ShardedOracleData:
+    m = part.num_districts
+    dpd = -(-m // num_devices)
+    m_pad = dpd * num_devices
+    kmax = max(len(li.vertices) for li in locals_)
+    lmax = max(li.labels.width for li in locals_)
+    hubs = -np.ones((m_pad, kmax, lmax), dtype=np.int32)
+    dists = np.full((m_pad, kmax, lmax), INF, dtype=np.float32)
+    for i, li in enumerate(locals_):
+        # device d owns global districts {d*dpd .. d*dpd+dpd-1} (blocked),
+        # so shard slot = i (blocked layout matches NamedSharding rows)
+        k = len(li.vertices)
+        w = li.labels.width
+        hubs[i, :k, :w] = li.labels.hubs
+        dists[i, :k, :w] = li.labels.dists
+    return ShardedOracleData(hubs, dists, bl.table.astype(np.float32),
+                             num_devices, m)
+
+
+def prepare_queries(part: Partition, locals_: list[LocalIndex],
+                    ss: np.ndarray, ts: np.ndarray) -> dict[str, np.ndarray]:
+    """Host-side client/edge-server preprocessing: route + localize ids."""
+    ss = np.asarray(ss, dtype=np.int64)
+    ts = np.asarray(ts, dtype=np.int64)
+    ds = part.assignment[ss].astype(np.int32)
+    dt = part.assignment[ts].astype(np.int32)
+    cross = ds != dt
+    s_local = np.zeros(len(ss), dtype=np.int32)
+    t_local = np.zeros(len(ss), dtype=np.int32)
+    for i, li in enumerate(locals_):
+        sel = (~cross) & (ds == np.int32(i))
+        if sel.any():
+            s_local[sel] = li.local_of(ss[sel]).astype(np.int32)
+            t_local[sel] = li.local_of(ts[sel]).astype(np.int32)
+    return {"s_glob": ss.astype(np.int32), "t_glob": ts.astype(np.int32),
+            "district": ds, "cross": cross,
+            "s_local": s_local, "t_local": t_local}
+
+
+def _sparse_join(hs, ds_, ht, dt_):
+    eq = (hs[:, :, None] == ht[:, None, :]) & (hs[:, :, None] >= 0)
+    tot = ds_[:, :, None] + dt_[:, None, :]
+    return jnp.min(jnp.where(eq, tot, jnp.inf), axis=(1, 2))
+
+
+def make_sharded_query_fn(mesh: Mesh, axis: str = "edge"):
+    """Returns a jitted query(batch) function bound to ``mesh``."""
+    esize = mesh.shape[axis]
+
+    def _device_fn(hubs, dists, btable, q):
+        # hubs/dists: (dpd, kmax, L) this device; everything else replicated
+        dev = jax.lax.axis_index(axis)
+        dpd = hubs.shape[0]
+        district = q["district"]
+        owner = district // dpd                       # blocked assignment
+        slot = district % dpd
+        mine_local = (~q["cross"]) & (owner == dev)
+        hs = hubs[slot, q["s_local"]]
+        ds_ = dists[slot, q["s_local"]]
+        ht = hubs[slot, q["t_local"]]
+        dt_ = dists[slot, q["t_local"]]
+        local_ans = _sparse_join(hs, ds_, ht, dt_)
+        ans = jnp.where(mine_local, local_ans, jnp.inf)
+        mine_cross = q["cross"] & (owner == dev)
+        rows_s = btable[q["s_glob"]]
+        rows_t = btable[q["t_glob"]]
+        cross_ans = jnp.min(rows_s + rows_t, axis=1)
+        ans = jnp.minimum(ans, jnp.where(mine_cross, cross_ans, jnp.inf))
+        return jax.lax.pmin(ans, axis)
+
+    sharded = jax.shard_map(
+        _device_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(), {k: P() for k in
+                  ("s_glob", "t_glob", "district", "cross",
+                   "s_local", "t_local")}),
+        out_specs=P(),
+    )
+    return jax.jit(sharded)
+
+
+def sharded_query(data: ShardedOracleData, mesh: Mesh,
+                  queries: dict[str, np.ndarray],
+                  axis: str = "edge") -> np.ndarray:
+    fn = make_sharded_query_fn(mesh, axis)
+    dev_sharding = NamedSharding(mesh, P(axis))
+    rep = NamedSharding(mesh, P())
+    hubs = jax.device_put(data.local_hubs, dev_sharding)
+    dists = jax.device_put(data.local_dists, dev_sharding)
+    btable = jax.device_put(data.btable, rep)
+    q = {k: jax.device_put(jnp.asarray(v), rep) for k, v in queries.items()}
+    return np.asarray(fn(hubs, dists, btable, q))

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    use_pallas: bool = True) -> jnp.ndarray:
+    """GQA flash attention. Pallas on TPU (interpret on CPU); the ref is
+    the dense-softmax oracle."""
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=_on_cpu())
+    return attention_ref(q, k, v, causal=causal)
+
+
+def hbm_bytes_per_call(q_shape, kv_shape, dtype_bytes: int = 2) -> int:
+    """Analytic HBM traffic of the fused kernel: Q+K+V read, O written —
+    the score tensor never leaves VMEM (the roofline iteration uses this
+    for the memory term instead of the unfused op-level byte count)."""
+    b, s, h, hd = q_shape
+    t, kv = kv_shape[1], kv_shape[2]
+    return dtype_bytes * (b * s * h * hd * 2 + 2 * b * t * kv * hd)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA-aware)."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd) with H % KV == 0. Returns
+    (B,S,H,hd). Computed in f32 (matches the kernel accumulator)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q5 = q.reshape(b, s, kv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q5,
+                        k.astype(jnp.float32)) / jnp.sqrt(hd)
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(t)[None, :]
+        scores = jnp.where(kj <= qi, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -1,0 +1,35 @@
+"""jit'd public wrappers for the query-join kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import join_lb_pallas, join_pallas
+from .ref import join_ref, join_sparse_ref, local_bound_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def join(s_rows: jnp.ndarray, t_rows: jnp.ndarray, *,
+         use_pallas: bool = True) -> jnp.ndarray:
+    """Batched dense 2-hop join λ(s,t,B) over gathered label rows."""
+    if use_pallas:
+        return join_pallas(s_rows, t_rows, interpret=_on_cpu())
+    return join_ref(s_rows, t_rows)
+
+
+def join_with_bound(s_rows: jnp.ndarray, t_rows: jnp.ndarray, *,
+                    use_pallas: bool = True
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused (λ, LB) — the Theorem-3 serving path during rebuilds."""
+    if use_pallas:
+        return join_lb_pallas(s_rows, t_rows, interpret=_on_cpu())
+    return join_ref(s_rows, t_rows), local_bound_ref(s_rows, t_rows)
+
+
+def join_sparse(hs, ds, ht, dt) -> jnp.ndarray:
+    """Padded sparse-label join (local indexes); pure-XLA — the O(L²)
+    mask fits VREGs for the small local label widths."""
+    return join_sparse_ref(hs, ds, ht, dt)

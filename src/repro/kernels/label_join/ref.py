@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the query-join kernels."""
+import jax.numpy as jnp
+
+
+def join_ref(s_rows: jnp.ndarray, t_rows: jnp.ndarray) -> jnp.ndarray:
+    """Dense hub-aligned 2-hop join (Definition 1 on the BorderLabels
+    layout): out[i] = min_j s_rows[i,j] + t_rows[i,j].  (Q,q)x(Q,q)->(Q,)."""
+    return jnp.min(s_rows + t_rows, axis=1)
+
+
+def join_sparse_ref(hs, ds, ht, dt) -> jnp.ndarray:
+    """Padded sparse join: hubs (Q,L) int32 (-1 pad), dists (Q,L) f32.
+    out[i] = min over (a,b) with hs[i,a]==ht[i,b]>=0 of ds[i,a]+dt[i,b]."""
+    eq = (hs[:, :, None] == ht[:, None, :]) & (hs[:, :, None] >= 0)
+    tot = ds[:, :, None] + dt[:, None, :]
+    return jnp.min(jnp.where(eq, tot, jnp.inf), axis=(1, 2))
+
+
+def local_bound_ref(s_border: jnp.ndarray, t_border: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Definition 5: LB[i] = min_b s_border[i,b] + min_b' t_border[i,b']."""
+    return jnp.min(s_border, axis=1) + jnp.min(t_border, axis=1)

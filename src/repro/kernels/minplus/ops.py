@@ -1,0 +1,59 @@
+"""jit'd public wrappers around the min-plus kernel.
+
+``use_pallas`` picks the Pallas kernel (interpret-mode on CPU, native on
+TPU); otherwise a pure-XLA fallback with identical semantics is used, so
+the 512-device dry-run lowering never requires TPU custom calls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import minplus_pallas, relax_pallas
+from .ref import minplus_ref, relax_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def minplus(a: jnp.ndarray, b: jnp.ndarray, *,
+            use_pallas: bool = True) -> jnp.ndarray:
+    """Tropical matmul C[i,j] = min_k A[i,k]+B[k,j]."""
+    if use_pallas:
+        return minplus_pallas(a, b, interpret=_on_cpu())
+    return minplus_ref(a, b)
+
+
+def relax(d: jnp.ndarray, a: jnp.ndarray, *,
+          use_pallas: bool = True) -> jnp.ndarray:
+    """One fused Bellman-Ford sweep D' = min(D, D ⊗ A)."""
+    if use_pallas:
+        return relax_pallas(d, a, interpret=_on_cpu())
+    return relax_ref(d, a)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "use_pallas"))
+def bellman_ford(init: jnp.ndarray, adj: jnp.ndarray, iters: int, *,
+                 use_pallas: bool = False) -> jnp.ndarray:
+    """Multi-source shortest distances on a dense adjacency by ``iters``
+    fused relax sweeps (iters >= graph hop-diameter for exactness)."""
+    def body(d, _):
+        return relax(d, adj, use_pallas=use_pallas), ()
+    out, _ = jax.lax.scan(body, init, None, length=iters)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def closure(w: jnp.ndarray, *, use_pallas: bool = False) -> jnp.ndarray:
+    """All-pairs min-plus closure by repeated squaring (log2 diameter)."""
+    import math
+    q = w.shape[0]
+    d = jnp.minimum(w, jnp.where(jnp.eye(q, dtype=bool), 0.0, jnp.inf))
+    steps = max(1, math.ceil(math.log2(max(2, q))))
+    def body(d, _):
+        return minplus(d, d, use_pallas=use_pallas), ()
+    d, _ = jax.lax.scan(body, d, None, length=steps)
+    return d

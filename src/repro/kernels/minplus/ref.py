@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the min-plus (tropical) matmul kernel."""
+import jax.numpy as jnp
+
+
+def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[i,j] = min_k A[i,k] + B[k,j].  a: (m,k), b: (k,n) -> (m,n).
+
+    The einsum of the tropical semiring — the contraction every stage of
+    the hierarchical Border-Labeling builder reduces to.
+    """
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def relax_ref(d: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """One Bellman-Ford sweep: D' = min(D, D ⊗ A) (⊗ = min-plus)."""
+    return jnp.minimum(d, minplus_ref(d, a))

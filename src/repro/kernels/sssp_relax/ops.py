@@ -1,0 +1,36 @@
+"""jit'd public wrappers for the APSP / relaxation kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..minplus.ops import relax
+from .kernel import floyd_warshall_pallas
+from .ref import floyd_warshall_ref, multi_source_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def floyd_warshall(adj: jnp.ndarray, *, use_pallas: bool = True,
+                   bk: int = 128) -> jnp.ndarray:
+    """Dense district APSP (diag 0, +inf absent)."""
+    if use_pallas:
+        return floyd_warshall_pallas(adj, bk=bk, interpret=_on_cpu())
+    return floyd_warshall_ref(adj)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "use_pallas"))
+def multi_source(adj: jnp.ndarray, init: jnp.ndarray, iters: int, *,
+                 use_pallas: bool = False) -> jnp.ndarray:
+    """``iters`` fused Bellman-Ford sweeps from ``init`` (S, V) rows —
+    stage A of the hierarchical builder when only border rows are needed."""
+    if use_pallas:
+        def body(d, _):
+            return relax(d, adj, use_pallas=True), ()
+        out, _ = jax.lax.scan(body, init, None, length=iters)
+        return out
+    return multi_source_ref(adj, init, iters)

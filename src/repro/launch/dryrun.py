@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, record memory / cost / collective analysis.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) so
+the XLA_FLAGS line above executes before any other jax import.
+
+Per cell:   jax.jit(step, in_shardings, out_shardings)
+                .lower(**input_specs(arch, shape)).compile()
+then ``memory_analysis()`` (fits-per-device proof), ``cost_analysis()``
+(FLOPs/bytes for §Roofline) and a collective-bytes sweep over the
+optimized HLO text. Results append to a JSON cache consumed by
+EXPERIMENTS.md and benchmarks (resumable — finished cells are skipped).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeSpec,
+                            get_config, shape_applicable)
+from ..distributed.act_sharding import (ActivationSharding,
+                                        activation_sharding)
+from ..distributed.sharding import (batch_pspecs, cache_pspecs, dp_axes,
+                                    param_pspecs, to_named)
+from ..train.optimizer import OptimizerConfig
+from ..train.train_step import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from .mesh import make_production_mesh
+
+MODEL_AXIS_NAME = "model"
+from .specs import input_specs
+
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\b")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                      r"pred)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+               "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+               "pred": 1}
+
+
+def default_micro(shape: ShapeSpec, mesh) -> int:
+    """Grad-accumulation factor: target ~2 sequences per device per
+    microbatch for the 4k train shape."""
+    if shape.kind != "train":
+        return 1
+    dp = 1
+    for a in dp_axes(mesh):
+        dp *= mesh.shape[a]
+    per_dev = max(1, shape.global_batch // dp)
+    return max(1, per_dev // 2)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "-done" in line.split("=")[0]:
+            continue  # count the -start (or plain) op once
+        kind = m.group(1)
+        eq = line.split("=", 1)
+        lhs = eq[0]
+        sm = SHAPE_RE.findall(lhs)
+        if not sm:
+            sm = SHAPE_RE.findall(line)
+        nbytes = 0
+        for dt, dims in sm:
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        out["count"] += 1
+    return out
+
+
+def best_remat_group(n_layers: int) -> int:
+    """Largest-balance divisor near sqrt(L) for two-level checkpointing."""
+    import math
+    target = math.sqrt(n_layers)
+    divs = [d for d in range(1, n_layers + 1) if n_layers % d == 0]
+    return min(divs, key=lambda d: abs(d - target))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               n_micro: int | None = None, remat: bool | None = None,
+               return_artifacts: bool = False,
+               serving_fsdp_params: bool = False, **cfg_overrides) -> dict:
+    from dataclasses import replace
+    cfg = replace(get_config(arch), onehot_embed=True, **cfg_overrides)
+    if cfg.remat_group == 0:
+        cfg = replace(cfg, remat_group=best_remat_group(
+            cfg.num_layers - cfg.first_k_dense))
+    if remat is not None:
+        cfg = replace(cfg, remat=remat)
+    if (SHAPES[shape_name].kind == "prefill"
+            and "attention_impl" not in cfg_overrides
+            and not cfg.use_mla and cfg.num_heads):
+        # production prefill runs the fused flash kernel (32k dense-softmax
+        # scores alone exceed HBM — see EXPERIMENTS §Perf); pass
+        # attention_impl="dense" explicitly for the naive baseline
+        cfg = replace(cfg, attention_impl="flash")
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(cfg, shape)
+    # serving-params policy: TP-only (no per-layer gathers) pays off while
+    # the data-replicated bf16 share fits comfortably next to the KV
+    # cache; past ~4 GB/device the ZeRO layout + gather wins (the gather
+    # amortizes over the decode batch)
+    tp_share_gb = 2e-9 * cfg.param_count() / mesh.shape[MODEL_AXIS_NAME]
+    if shape.kind == "train" or serving_fsdp_params or tp_share_gb > 4.0:
+        pspecs = param_pspecs(mesh, cfg, specs["params"])
+    else:
+        from ..distributed.sharding import serving_param_pspecs
+        pspecs = serving_param_pspecs(mesh, cfg, specs["params"])
+    pshard = to_named(mesh, pspecs)
+    rep = NamedSharding(mesh, P())
+
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    micro_for_div = n_micro if n_micro is not None \
+        else default_micro(shape, mesh)
+    eff_batch = shape.global_batch // (micro_for_div
+                                       if shape.kind == "train" else 1)
+    batch_axes = dp if eff_batch % dp_total == 0 else None
+    act_ctx = ActivationSharding(mesh, batch_axes)
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        micro = n_micro if n_micro is not None else default_micro(shape, mesh)
+        step = make_train_step(cfg, OptimizerConfig(), n_micro=micro,
+                               grad_shardings=pshard)
+        oshard = {"m": pshard, "v": pshard,
+                  "step": rep}
+        bshard = to_named(mesh, batch_pspecs(mesh, cfg, shape))
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard,
+                                        {"loss": rep, "grad_norm": rep,
+                                         "lr": rep}),
+                         donate_argnums=(0, 1))   # params/opt updated
+        with activation_sharding(act_ctx):
+            lowered = jitted.lower(specs["params"], specs["opt"],
+                                   specs["batch"])
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        bshard = to_named(mesh, batch_pspecs(mesh, cfg, shape))
+        out_spec = NamedSharding(
+            mesh, P(batch_pspecs(mesh, cfg, shape)["labels"][0], None, None))
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=out_spec)
+        with activation_sharding(act_ctx):
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        micro = 1
+    else:
+        step = make_serve_step(cfg)
+        cshard = to_named(mesh, cache_pspecs(mesh, cfg, shape.global_batch,
+                                             specs["cache"]))
+        bspec = batch_pspecs(mesh, cfg, shape)["labels"][0]
+        tshard = NamedSharding(mesh, P(bspec, None))
+        lshard = NamedSharding(mesh, P(bspec, None, None))
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, cshard, tshard, rep),
+                         out_shardings=(lshard, cshard),
+                         donate_argnums=(1,))   # in-place KV cache
+        with activation_sharding(act_ctx):
+            lowered = jitted.lower(specs["params"], specs["cache"],
+                                   specs["tokens"], specs["pos"])
+        micro = 1
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    ndev = mesh.devices.size
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    def _mb(x):
+        return round(x / 1e6, 2)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "n_micro": micro,
+        "devices": ndev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_total": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "argument_mb_per_dev": _mb(mem.argument_size_in_bytes),
+        "output_mb_per_dev": _mb(mem.output_size_in_bytes),
+        "temp_mb_per_dev": _mb(mem.temp_size_in_bytes),
+        # donation aliases outputs onto inputs (train: params/opt;
+        # decode: the KV cache), so live bytes = max(args, out) + temp
+        "peak_mb_per_dev": _mb(max(mem.argument_size_in_bytes,
+                                   mem.output_size_in_bytes)
+                               + mem.temp_size_in_bytes),
+        "collectives": coll,
+        "params": cfg.param_count(),
+    }
+    print(f"[dryrun] {arch} {shape_name} mesh="
+          f"{result['mesh']}: compile {t_compile:.1f}s, "
+          f"peak {result['peak_mb_per_dev']} MB/dev, "
+          f"{coll['count']} collectives")
+    print(f"  memory_analysis: args={result['argument_mb_per_dev']}MB "
+          f"out={result['output_mb_per_dev']}MB "
+          f"temp={result['temp_mb_per_dev']}MB")
+    print(f"  cost_analysis: flops={result['flops_total']:.3e} "
+          f"bytes={result['bytes_accessed']:.3e}")
+    if return_artifacts:
+        return result, lowered, compiled
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    cache: dict[str, dict] = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            cache = json.load(f)
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                key = f"{arch}|{shape_name}|{'mp' if multi_pod else 'sp'}"
+                if key in cache and "error" not in cache[key]:
+                    continue
+                try:
+                    cache[key] = lower_cell(arch, shape_name, multi_pod,
+                                            n_micro=args.micro)
+                except Exception as e:      # noqa: BLE001
+                    traceback.print_exc()
+                    cache[key] = {"arch": arch, "shape": shape_name,
+                                  "mesh": "2x16x16" if multi_pod
+                                  else "16x16",
+                                  "error": f"{type(e).__name__}: {e}"}
+                with open(args.out, "w") as f:
+                    json.dump(cache, f, indent=1)
+    errors = [k for k, v in cache.items() if "error" in v]
+    skips = [k for k, v in cache.items() if "skipped" in v]
+    print(f"\n[dryrun] done: {len(cache)} cells, {len(skips)} skipped, "
+          f"{len(errors)} errors")
+    for k in errors:
+        print(f"  ERROR {k}: {cache[k]['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+zero-allocation contract (weak-type-correct, shardable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models.lm import init_cache, init_params
+from ..train.optimizer import init_opt_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"labels": SDS((b, s), jnp.int32)}
+    if cfg.frontend == "frame":
+        out["frames"] = SDS((b, s, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = SDS((b, s), jnp.int32)
+    if cfg.frontend == "patch":
+        out["patches"] = SDS((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec) -> tuple[dict, SDS, SDS]:
+    """(cache shape tree, tokens, pos) for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    tokens = SDS((b, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return cache, tokens, pos
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_specs(params_shape: dict) -> dict:
+    return jax.eval_shape(init_opt_state, params_shape)
+
+
+def serving_param_specs(cfg: ArchConfig) -> dict:
+    """Serving holds matmul weights in the compute dtype (bf16)."""
+    cd = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    return jax.tree.map(
+        lambda a: SDS(a.shape, cd) if len(a.shape) >= 2 else a,
+        param_specs(cfg))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Everything the lowered step consumes, keyed by role."""
+    if shape.kind == "train":
+        out = {"params": param_specs(cfg)}
+        out["opt"] = opt_specs(out["params"])
+        out["batch"] = batch_specs(cfg, shape)
+    elif shape.kind == "prefill":
+        out = {"params": serving_param_specs(cfg)}
+        out["batch"] = batch_specs(cfg, shape)
+    else:  # decode
+        out = {"params": serving_param_specs(cfg)}
+        cache, tokens, pos = decode_specs(cfg, shape)
+        out["cache"], out["tokens"], out["pos"] = cache, tokens, pos
+    return out

@@ -1,0 +1,54 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b --smoke
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b \
+        --steps 100 --seq 512 --batch 16 --ckpt /tmp/ckpt
+
+``--smoke`` runs the reduced config (CPU-sized); otherwise the full
+config is used (expects real accelerators; on CPU it will be slow).
+The loop is the fault-tolerant driver: periodic async checkpoints,
+restore-and-replay on failure, straggler logging.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs.base import get_config, get_smoke_config
+from ..models.lm import init_params
+from ..train.data import DataConfig
+from ..train.loop import LoopConfig, run_training
+from ..train.optimizer import OptimizerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"{cfg.name}: {cfg.param_count():,} params, "
+          f"{len(jax.devices())} devices")
+    oc = OptimizerConfig(peak_lr=args.lr, warmup_steps=max(5, args.steps // 10),
+                         total_steps=args.steps)
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch)
+    lc = LoopConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every,
+                    checkpoint_dir=args.ckpt)
+    st = run_training(cfg, oc, dcfg, lc,
+                      lambda: init_params(cfg, jax.random.PRNGKey(0)),
+                      n_micro=args.micro)
+    print(f"finished at step {st.step}; "
+          f"loss {st.losses[0]:.3f} -> {st.losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""GQA attention (RoPE, optional qk-norm) and MLA (DeepSeek-V2).
+
+Each module exposes init / full-sequence apply (train & prefill) / decode
+apply (single new token against a fixed-size cache written at ``pos``).
+Caches are dicts of arrays so they shard like any other pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import apply_rope, dense_init, head_rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ArchConfig, dtype, d_in: int | None = None,
+             d_out: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d_out or cfg.d_model,
+                         dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype=jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), dtype=jnp.float32)
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,H,hd) k/v: (B,T,kv,hd); grouped by repeating q into kv
+    groups. mask: (B,1,S,T) additive or None. Query heads are pinned to
+    the model axis (TP) so the (S,T) score tensor shards by head."""
+    from ..distributed.act_sharding import constrain_tp, current
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    ctx = current()
+    heads_divide = (ctx is None or ctx.model_axis is None
+                    or h % ctx.mesh.shape[ctx.model_axis] == 0)
+    if heads_divide:
+        q = constrain_tp(q, 2)             # TP: heads over model axis
+    else:
+        # context parallelism: 36-head configs can't shard heads 16 ways;
+        # shard the query sequence instead (keys stay whole per kv group)
+        # — otherwise the partitioner replicates and all-reduces the
+        # (B,H,S,T) scores (measured 7.5 TB/device at 32k prefill)
+        q = constrain_tp(q, 1)
+    q = q.reshape(b, s, kv, group, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = scores + mask[:, :, None]     # (B,1,1,S,T) broadcast
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    out = out.reshape(b, s, h, hd)
+    return constrain_tp(out, 2 if heads_divide else 1)
+
+
+def causal_mask(s: int, t: int, offset: int = 0) -> jnp.ndarray:
+    """(1,1,S,T) additive mask. query i attends to keys <= i + offset."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    return jnp.where(kj <= qi, 0.0, NEG_INF)[None, None].astype(jnp.float32)
+
+
+def gqa_apply(p: dict, cfg: ArchConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    hd = cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"], cfg.num_heads, hd)
+    k = _split_heads(x @ p["wk"], cfg.num_kv_heads, hd)
+    v = _split_heads(x @ p["wv"], cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    if cfg.attention_impl == "flash":
+        from ..kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=causal)
+    elif cfg.attention_impl == "stub":
+        # roofline probe: QKVO traffic only — the HBM byte model of the
+        # fused flash kernel (scores stay in VMEM); flops added back
+        # analytically by launch/roofline.py
+        g = cfg.num_heads // cfg.num_kv_heads
+        out = jnp.repeat(v[:, :s] if v.shape[1] >= s else v, g, axis=2) \
+            + 0.0 * q
+    else:
+        mask = causal_mask(s, s) if causal else None
+        out = _sdpa(q, k, v, mask)
+    return out.reshape(x.shape[0], s, -1) @ p["wo"]
+
+
+def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
+                   d_in: int | None = None) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype=dtype),
+    }
+
+
+def gqa_decode(p: dict, cfg: ArchConfig, x: jnp.ndarray, cache: dict,
+               pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """x: (B, 1, D); cache k/v: (B, T, kv, hd); pos: () int32 — write slot.
+    Attends to cache entries < pos+1."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"], cfg.num_heads, hd)
+    k_new = _split_heads(x @ p["wk"], cfg.num_kv_heads, hd)
+    v_new = _split_heads(x @ p["wv"], cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k_new = head_rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+    posb = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            pos, axis=1)
+    t = k.shape[1]
+    valid = (jnp.arange(t)[None, :] <= pos)
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None] \
+        .astype(jnp.float32)                              # (1,1,1,T)
+    out = _sdpa(q, k, v, mask)
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], d, qr, dtype),          # down
+        "q_a_norm": jnp.ones((qr,), dtype=jnp.float32),
+        "wq_b": dense_init(ks[1], qr, h * (dn + dr), dtype),   # up
+        "wkv_a": dense_init(ks[2], d, r + dr, dtype),     # latent + k_rope
+        "kv_a_norm": jnp.ones((r,), dtype=jnp.float32),
+        "wk_b": dense_init(ks[3], r, h * dn, dtype),
+        "wv_b": dense_init(ks[4], r, h * dv, dtype),
+        "wo": dense_init(ks[5], h * dv, d, dtype),
+    }
+
+
+def _mla_qkv(p, cfg: ArchConfig, x, positions):
+    from .layers import rms_norm
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]                                   # (B,S,r+dr)
+    latent = rms_norm(kv[..., :r], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., r:][:, :, None, :], positions,
+                        cfg.rope_theta)                   # (B,S,1,dr)
+    return q_nope, q_rope, latent, k_rope
+
+
+def _mla_attend(p, cfg: ArchConfig, q_nope, q_rope, latent, k_rope, mask):
+    b, s, h, dn = q_nope.shape
+    t = latent.shape[1]
+    dv = cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    k_nope = (latent @ p["wk_b"]).reshape(b, t, h, dn)
+    v = (latent @ p["wv_b"]).reshape(b, t, h, dv)
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+              + jnp.einsum("bshd,btxd->bhst", q_rope,
+                           k_rope)).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dn + cfg.qk_rope_head_dim)
+    if mask is not None:
+        scores = scores + mask
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v)
+    return out.reshape(b, s, h * dv) @ p["wo"]
+
+
+def mla_apply(p: dict, cfg: ArchConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, cfg, x, positions)
+    s = x.shape[1]
+    mask = causal_mask(s, s) if causal else None
+    return _mla_attend(p, cfg, q_nope, q_rope, latent, k_rope, mask)
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    """MLA caches the compressed latent (+ rope key) — this is the
+    published memory win: r + dr floats per token instead of 2*H*hd."""
+    return {
+        "latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype=dtype),
+        "k_rope": jnp.zeros((batch, max_len, 1, cfg.qk_rope_head_dim),
+                            dtype=dtype),
+    }
+
+
+def mla_decode(p: dict, cfg: ArchConfig, x: jnp.ndarray, cache: dict,
+               pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    b = x.shape[0]
+    posb = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, cfg, x, posb)
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), pos,
+        axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos,
+        axis=1)
+    t = latent.shape[1]
+    valid = jnp.arange(t)[None, :] <= pos
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None].astype(jnp.float32)
+    y = _mla_attend(p, cfg, q_nope, q_rope, latent, k_rope, mask)
+    return y, {"latent": latent, "k_rope": k_rope}

@@ -1,0 +1,200 @@
+"""Shared neural layers (pure-JAX, functional; params are plain dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rms_norm(x: jnp.ndarray, gamma: jnp.ndarray,
+                  eps: float) -> jnp.ndarray:
+    """qk-norm: RMS over the head_dim of (..., heads, head_dim)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, mlp_type: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {"wi": dense_init(ks[0], d, f, dtype),
+                "wg": dense_init(ks[1], d, f, dtype),
+                "wo": dense_init(ks[2], f, d, dtype)}
+    return {"wi": dense_init(ks[0], d, f, dtype),
+            "wo": dense_init(ks[2], f, d, dtype)}
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, mlp_type: str) -> jnp.ndarray:
+    from ..distributed.act_sharding import constrain_tp
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["wi"], approximate=True)
+    else:
+        raise ValueError(mlp_type)
+    h = constrain_tp(h, h.ndim - 1)     # TP: d_ff over the model axis
+    return h @ p["wo"]
+
+
+def onehot_embed_lookup(embed: jnp.ndarray, tokens: jnp.ndarray,
+                        chunk: int, out_dtype) -> jnp.ndarray:
+    """Embedding lookup as a chunked one-hot matmul.
+
+    The SPMD partitioner handles a vocab-sharded *contraction* cleanly
+    (partial products + all-reduce), whereas a gather from a vocab-sharded
+    table falls back to full rematerialization (replicate-then-repartition
+    — observed 4.8 GB/device for the 256k-vocab config). Sequence chunking
+    + remat keep the transient one-hot at (B, chunk, V/shard).
+    """
+    b, s = tokens.shape
+    if s % chunk != 0:
+        chunk = s
+    n = s // chunk
+    tc = tokens.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(_, tb):
+        oh = jax.nn.one_hot(tb, embed.shape[0], dtype=embed.dtype)
+        return (), oh @ embed
+
+    _, out = jax.lax.scan(body, (), tc)             # (n, B, chunk, D)
+    return out.transpose(1, 0, 2, 3).reshape(b, s, -1).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (never materializes the full (B,S,V) logits)
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+def _chunk_views(x, labels, chunk):
+    b, s, d = x.shape
+    if s % chunk != 0:
+        chunk = s  # fall back for tiny smoke shapes
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    return xc, lc, n, chunk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def chunked_softmax_xent(x: jnp.ndarray, lm_head: jnp.ndarray,
+                         labels: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """Mean CE over (B,S) with logits computed per sequence chunk.
+
+    x: (B, S, D) final hidden states; lm_head: (D, V); labels: (B, S).
+    The (B, chunk, V) logits block is transient — with vocab TP-sharded,
+    the peak per-device logits buffer shrinks by seq_len/chunk. The VJP is
+    hand-written so the backward also runs chunked AND accumulates the
+    lm_head cotangent in the FSDP×TP layout (the autodiff version keeps
+    ~9 full-size fp32 dW partials alive — 10+ GB/device at 256k vocab).
+    """
+    loss, _ = _xent_fwd(x, lm_head, labels, chunk)
+    return loss
+
+
+def _xent_fwd(x, lm_head, labels, chunk):
+    b, s, d = x.shape
+    xc, lc, n, chunk = _chunk_views(x, labels, chunk)
+    w32 = lm_head.astype(jnp.float32)
+
+    def body(acc, xs):
+        xb, lb = xs
+        logits = xb.astype(jnp.float32) @ w32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), ()
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s), (x, lm_head, labels)
+
+
+def _xent_bwd(chunk, res, g):
+    from ..distributed.act_sharding import constrain_matrix
+    x, lm_head, labels = res
+    b, s, d = x.shape
+    v = lm_head.shape[1]
+    xc, lc, n, chunk = _chunk_views(x, labels, chunk)
+    w32 = lm_head.astype(jnp.float32)
+    scale = (g / (b * s)).astype(jnp.float32)
+
+    def body(dw, xs):
+        xb, lb = xs                       # (b,chunk,d), (b,chunk)
+        x32 = xb.astype(jnp.float32)
+        logits = x32 @ w32
+        p = jax.nn.softmax(logits, axis=-1)
+        dlogits = (p - jax.nn.one_hot(lb, v, dtype=jnp.float32)) * scale
+        dxb = dlogits @ w32.T
+        dw_part = jnp.einsum("bcd,bcv->dv", x32, dlogits)
+        dw = constrain_matrix(dw + dw_part)   # stays in the weight layout
+        return dw, dxb
+
+    dw0 = constrain_matrix(jnp.zeros((d, v), jnp.float32))
+    dw, dxc = jax.lax.scan(body, dw0, (xc, lc))
+    dx = dxc.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    return dx, dw.astype(lm_head.dtype), None
+
+
+chunked_softmax_xent.defvjp(_xent_fwd, _xent_bwd)

@@ -1,0 +1,430 @@
+"""LM assembly: init / forward / loss / prefill / decode for every family.
+
+Layer parameters are stacked along a leading ``L`` axis and the stack is
+consumed by ``lax.scan`` (+ optional remat), so the lowered HLO is one
+while-loop regardless of depth — essential to keep the 512-device dry-run
+compile tractable for 95-layer configs.
+
+Families:
+  dense / vlm / audio — pre-norm attention + MLP blocks (GQA or MLA);
+  moe                 — attention + MoE FFN (optionally first-k dense);
+  ssm                 — Mamba2 SSD blocks only;
+  hybrid              — Mamba2 backbone + one *shared* attention+MLP block
+                        applied every ``shared_attn_every`` layers on
+                        [hidden ; original-embedding] (Zamba2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.act_sharding import constrain
+from .attention import (gqa_apply, gqa_decode, gqa_init, gqa_init_cache,
+                        mla_apply, mla_decode, mla_init, mla_init_cache)
+from .layers import (chunked_softmax_xent, dense_init, dtype_of, embed_init,
+                     mlp_apply, mlp_init, rms_norm)
+from .mamba2 import (mamba2_apply, mamba2_decode, mamba2_init,
+                     mamba2_init_cache)
+from .moe import aux_load_balance_loss, moe_apply, moe_init
+
+Params = dict
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg: ArchConfig, dtype):
+    if cfg.use_mla:
+        return mla_init(key, cfg, dtype)
+    return gqa_init(key, cfg, dtype)
+
+
+def _layer_init(key, cfg: ArchConfig, dtype, moe_layer: bool) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        return {"norm": jnp.ones((d,), jnp.float32),
+                "mixer": mamba2_init(ks[0], cfg, dtype)}
+    p = {"attn_norm": jnp.ones((d,), jnp.float32),
+         "mlp_norm": jnp.ones((d,), jnp.float32),
+         "attn": _attn_init(ks[0], cfg, dtype)}
+    if moe_layer:
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model,
+                                       cfg.vocab_size, dtype)
+
+    def stacked(layer_keys, moe_layer):
+        return jax.vmap(
+            lambda k: _layer_init(k, cfg, dtype, moe_layer))(layer_keys)
+
+    if cfg.family == "moe" and cfg.first_k_dense:
+        k_dense = jax.random.split(keys[2], cfg.first_k_dense)
+        k_moe = jax.random.split(keys[3],
+                                 cfg.num_layers - cfg.first_k_dense)
+        params["dense_layers"] = stacked(k_dense, moe_layer=False)
+        params["layers"] = stacked(k_moe, moe_layer=True)
+    else:
+        k_all = jax.random.split(keys[2], cfg.num_layers)
+        params["layers"] = stacked(k_all, moe_layer=cfg.family == "moe")
+
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        d2 = 2 * cfg.d_model
+        ks = jax.random.split(keys[4], 4)
+        params["shared"] = {
+            "attn_norm": jnp.ones((d2,), jnp.float32),
+            "attn": gqa_init(ks[0], cfg, dtype, d_in=d2, d_out=d2),
+            "mlp_norm": jnp.ones((d2,), jnp.float32),
+            "mlp": mlp_init(ks[1], d2, cfg.d_ff, cfg.mlp_type, dtype),
+            "out_proj": dense_init(ks[2], d2, cfg.d_model, dtype),
+        }
+    return params
+
+
+def cast_params(params: Params, cfg: ArchConfig) -> Params:
+    """Cast matmul weights to compute dtype (norm vectors stay f32)."""
+    cd = dtype_of(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda a: a.astype(cd) if a.ndim >= 2 else a, params)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _dense_block(p, cfg: ArchConfig, x, positions, moe_layer: bool):
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if cfg.use_mla:
+        h = mla_apply(p["attn"], cfg, h, positions, causal=cfg.causal)
+    else:
+        h = gqa_apply(p["attn"], cfg, h, positions, causal=cfg.causal)
+    x = x + h
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if moe_layer:
+        h = moe_apply(p["moe"], cfg, h)
+    else:
+        h = mlp_apply(p["mlp"], h, cfg.mlp_type)
+    return x + h
+
+
+def _ssm_block(p, cfg: ArchConfig, x):
+    return x + mamba2_apply(p["mixer"], cfg,
+                            rms_norm(x, p["norm"], cfg.norm_eps))
+
+
+def _shared_block(ps, cfg: ArchConfig, x, emb0, positions):
+    h = jnp.concatenate([x, emb0], axis=-1)
+    a = rms_norm(h, ps["attn_norm"], cfg.norm_eps)
+    h = h + gqa_apply(ps["attn"], cfg, a, positions, causal=True)
+    m = rms_norm(h, ps["mlp_norm"], cfg.norm_eps)
+    h = h + mlp_apply(ps["mlp"], m, cfg.mlp_type)
+    return x + h @ ps["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.frontend == "frame":
+        return batch["frames"].astype(cd)
+    if cfg.onehot_embed:
+        from .layers import onehot_embed_lookup
+        x = onehot_embed_lookup(params["embed"], batch["tokens"],
+                                cfg.ce_chunk, cd)
+    else:
+        x = params["embed"][batch["tokens"]].astype(cd)
+    if cfg.frontend == "patch" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(cd), x], axis=1)
+    return x
+
+
+def forward(params: Params, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    """Returns final hidden states (B, S', D). S' includes patches."""
+    params = cast_params(params, cfg)
+    x = constrain(_embed_inputs(params, cfg, batch))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def run_stack(x, stack, block_fn):
+        def body(carry, layer_p):
+            x, i = carry
+            y = block_fn(layer_p, constrain(x), i)
+            return (constrain(y, "seq"), i + 1), ()
+        body = jax.checkpoint(body) if cfg.remat else body
+        L = jax.tree.leaves(stack)[0].shape[0]
+        if not cfg.scan_layers:
+            # unrolled (cost-probe mode): while-loops hide trip counts
+            # from cost_analysis, so the roofline probe unrolls layers
+            carry = (x, jnp.int32(0))
+            for li in range(L):
+                layer_p = jax.tree.map(lambda a: a[li], stack)
+                carry, _ = body(carry, layer_p)
+            return carry[0]
+        g = cfg.remat_group
+        if cfg.remat and g > 1 and L % g == 0:
+            # two-level checkpointing: save carries at group boundaries
+            # only (L/g residuals live), recompute within a group during
+            # its backward — O(L/g + g) live activations instead of O(L)
+            grouped = jax.tree.map(
+                lambda a: a.reshape(L // g, g, *a.shape[1:]), stack)
+
+            @jax.checkpoint
+            def group_body(carry, group_p):
+                (y, i), _ = jax.lax.scan(body, carry, group_p)
+                # saved group-boundary residual is sequence-parallel: the
+                # reshard happens once per group, the stack shrinks by TP
+                return (constrain(y, "seq"), i), ()
+
+            (x, _), _ = jax.lax.scan(group_body, (x, jnp.int32(0)), grouped)
+            return constrain(x)
+        (x, _), _ = jax.lax.scan(body, (x, jnp.int32(0)), stack)
+        return x
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        x = run_stack(x, params["layers"],
+                      lambda p, x, i: _dense_block(p, cfg, x, positions,
+                                                   moe_layer=False))
+    elif cfg.family == "moe":
+        if "dense_layers" in params:
+            x = run_stack(x, params["dense_layers"],
+                          lambda p, x, i: _dense_block(p, cfg, x, positions,
+                                                       moe_layer=False))
+        x = run_stack(x, params["layers"],
+                      lambda p, x, i: _dense_block(p, cfg, x, positions,
+                                                   moe_layer=True))
+    elif cfg.family == "ssm":
+        x = run_stack(x, params["layers"],
+                      lambda p, x, i: _ssm_block(p, cfg, x))
+    elif cfg.family == "hybrid":
+        emb0 = x
+        every = cfg.shared_attn_every
+
+        def hybrid_block(p, x, i):
+            x = _ssm_block(p, cfg, x)
+            if every:
+                x = jax.lax.cond(
+                    (i % every) == (every - 1),
+                    lambda x: _shared_block(params["shared"], cfg, x,
+                                            emb0, positions),
+                    lambda x: x, x)
+            return x
+
+        x = run_stack(x, params["layers"], hybrid_block)
+    else:
+        raise ValueError(cfg.family)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def lm_head_weight(params: Params, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    x = forward(params, cfg, batch)
+    if cfg.frontend == "patch" and "patches" in batch:
+        x = x[:, batch["patches"].shape[1]:]     # score text positions only
+    w = lm_head_weight(cast_params(params, cfg), cfg)
+    loss = chunked_softmax_xent(x, w, batch["labels"], cfg.ce_chunk)
+    if cfg.family == "moe":
+        # router balance against the final hidden states (one extra router
+        # matmul; per-layer balance terms live inside moe_apply's gates)
+        aux = aux_load_balance_loss(_first_moe_params(params), cfg, x)
+        loss = loss + MOE_AUX_COEF * aux
+    return loss
+
+
+def _first_moe_params(params: Params):
+    return jax.tree.map(lambda a: a[0], params["layers"])["moe"]
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    cd = dtype_of(cfg.compute_dtype)
+    L = cfg.num_layers
+
+    def stack(make, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *([make()] * n)) if n else None
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        return {"layers": stack(
+            lambda: gqa_init_cache(cfg, batch, max_len, cd), L)}
+    if cfg.family == "moe":
+        mk = (lambda: mla_init_cache(cfg, batch, max_len, cd)) if cfg.use_mla \
+            else (lambda: gqa_init_cache(cfg, batch, max_len, cd))
+        out = {"layers": stack(mk, L - cfg.first_k_dense)}
+        if cfg.first_k_dense:
+            out["dense_layers"] = stack(mk, cfg.first_k_dense)
+        return out
+    if cfg.family == "ssm":
+        return {"layers": stack(lambda: mamba2_init_cache(cfg, batch, cd), L)}
+    if cfg.family == "hybrid":
+        napp = (L // cfg.shared_attn_every) if cfg.shared_attn_every else 0
+        out = {"layers": stack(lambda: mamba2_init_cache(cfg, batch, cd), L)}
+        if napp:
+            out["shared"] = stack(
+                lambda: gqa_init_cache(cfg, batch, max_len, cd,
+                                       d_in=2 * cfg.d_model), napp)
+        return out
+    raise ValueError(cfg.family)
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        tree)
+
+
+def _update_tree(full, one, i):
+    return jax.tree.map(
+        lambda f, o: jax.lax.dynamic_update_index_in_dim(
+            f, o.astype(f.dtype), i, 0), full, one)
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Any,
+                tokens: jnp.ndarray, pos: jnp.ndarray
+                ) -> tuple[jnp.ndarray, Any]:
+    """One serving step: tokens (B,1) int32, pos () int32 write slot.
+    Returns (logits (B,1,V), new cache).
+
+    Layers run under ``fori_loop`` with the stacked caches carried and
+    updated *in place* (dynamic_update_index) — a scan would stack fresh
+    per-layer cache outputs and copy the whole multi-GB KV cache per step.
+    """
+    params = cast_params(params, cfg)
+    cd = dtype_of(cfg.compute_dtype)
+    x = constrain(params["embed"][tokens].astype(cd))
+
+    def dense_step(pl, x, cl):
+        h = rms_norm(x, pl["attn_norm"], cfg.norm_eps)
+        if cfg.use_mla:
+            a, c2 = mla_decode(pl["attn"], cfg, h, cl, pos)
+        else:
+            a, c2 = gqa_decode(pl["attn"], cfg, h, cl, pos)
+        x = x + a
+        h = rms_norm(x, pl["mlp_norm"], cfg.norm_eps)
+        if "moe" in pl:
+            # decode batches are tiny: dropless capacity
+            h = moe_apply(pl["moe"], cfg, h,
+                          capacity_factor=float(cfg.num_experts))
+        else:
+            h = mlp_apply(pl["mlp"], h, cfg.mlp_type)
+        return x + h, c2
+
+    def ssm_step(pl, x, cl):
+        h = rms_norm(x, pl["norm"], cfg.norm_eps)
+        y, c2 = mamba2_decode(pl["mixer"], cfg, h, cl)
+        return x + y, c2
+
+    def run_loop(x, stack_p, stack_c, step_fn, length, extra=None):
+        def body(i, carry):
+            x, ctree = carry
+            pl = _index_tree(stack_p, i)
+            cl = _index_tree(ctree, i)
+            y, c2 = step_fn(pl, constrain(x), cl) if extra is None \
+                else step_fn(pl, constrain(x), cl, i)
+            return (constrain(y), _update_tree(ctree, c2, i))
+        if not cfg.scan_layers:   # cost-probe mode: unrolled
+            carry = (x, stack_c)
+            for li in range(length):
+                carry = body(jnp.int32(li), carry)
+            return carry
+        return jax.lax.fori_loop(0, length, body, (x, stack_c))
+
+    new_cache = dict(cache)
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if "dense_layers" in params:
+            x, cs = run_loop(x, params["dense_layers"],
+                             cache["dense_layers"], dense_step,
+                             cfg.first_k_dense)
+            new_cache["dense_layers"] = cs
+        n = cfg.num_layers - cfg.first_k_dense
+        x, cs = run_loop(x, params["layers"], cache["layers"], dense_step, n)
+        new_cache["layers"] = cs
+
+    elif cfg.family == "ssm":
+        x, cs = run_loop(x, params["layers"], cache["layers"], ssm_step,
+                         cfg.num_layers)
+        new_cache["layers"] = cs
+
+    elif cfg.family == "hybrid":
+        # zamba2's shared block concatenates the *current position's*
+        # embedding with the hidden stream — no history needed
+        emb0 = x
+        every = cfg.shared_attn_every
+        shared_c = cache.get("shared")
+
+        def hybrid_body(i, carry):
+            x, ctree, stree = carry
+            pl = _index_tree(params["layers"], i)
+            cl = _index_tree(ctree, i)
+            y, c2 = ssm_step(pl, constrain(x), cl)
+            ctree = _update_tree(ctree, c2, i)
+
+            if every and stree is not None:
+                def with_shared(args):
+                    y, stree = args
+                    app = i // every
+                    sc = _index_tree(stree, app)
+                    y2, sc2 = _shared_decode(params["shared"], cfg, y,
+                                             emb0, sc, pos)
+                    return y2, _update_tree(stree, sc2, app)
+
+                y, stree = jax.lax.cond(
+                    (i % every) == (every - 1), with_shared,
+                    lambda args: args, (y, stree))
+            return (constrain(y), ctree, stree)
+
+        if not cfg.scan_layers:   # cost-probe mode: unrolled
+            carry = (x, cache["layers"], shared_c)
+            for li in range(cfg.num_layers):
+                carry = hybrid_body(jnp.int32(li), carry)
+            x, cs, ss = carry
+        else:
+            x, cs, ss = jax.lax.fori_loop(
+                0, cfg.num_layers, hybrid_body,
+                (x, cache["layers"], shared_c))
+        new_cache["layers"] = cs
+        if shared_c is not None:
+            new_cache["shared"] = ss
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ lm_head_weight(params, cfg)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _shared_decode(ps, cfg: ArchConfig, x, emb0, cache, pos):
+    h = jnp.concatenate([x, emb0], axis=-1)
+    a = rms_norm(h, ps["attn_norm"], cfg.norm_eps)
+    att, c2 = gqa_decode(ps["attn"], cfg, a, cache, pos)
+    h = h + att
+    m = rms_norm(h, ps["mlp_norm"], cfg.norm_eps)
+    h = h + mlp_apply(ps["mlp"], m, cfg.mlp_type)
+    return x + h @ ps["out_proj"], c2

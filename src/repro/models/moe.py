@@ -1,0 +1,224 @@
+"""Mixture-of-Experts layer (OLMoE / DeepSeek-V2 style).
+
+Token dispatch is the sort-based capacity scheme: the (tokens × top-k)
+assignments are sorted by expert id and packed into an (E, C) buffer, every
+expert runs a dense (C, d)→(C, f)→(C, d) FFN (vmapped, so the expert axis
+shards over the ``model`` mesh axis = expert parallelism), and results
+scatter back weighted by the router gate. Tokens beyond an expert's
+capacity are dropped (standard capacity-factor semantics); the router is
+softmax-then-top-k with optional normalization, plus shared experts that
+every token visits (DeepSeek-V2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, mlp_apply
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 5)
+
+    def stack_init(k, d_in, d_out):
+        kk = jax.random.split(k, e)
+        return jnp.stack([dense_init(kk[i], d_in, d_out, dtype)
+                          for i in range(e)])
+
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "wi": stack_init(ks[1], d, f),
+        "wg": stack_init(ks[2], d, f),
+        "wo": stack_init(ks[3], f, d),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"wi": dense_init(kk[0], d, fs, dtype),
+                       "wg": dense_init(kk[1], d, fs, dtype),
+                       "wo": dense_init(kk[2], fs, d, dtype)}
+    return p
+
+
+def moe_apply(p: dict, cfg: ArchConfig, x: jnp.ndarray,
+              capacity_factor: float | None = None) -> jnp.ndarray:
+    """Dispatch + expert FFN + combine. With an activation-sharding
+    context installed this runs the shard_map EP path (each model-shard
+    dispatches the full local token set to ITS experts and the partial
+    outputs psum over the model axis); without one (single-host tests) it
+    runs the vectorized global dispatch below."""
+    from ..distributed.act_sharding import current
+    ctx = current()
+    if (ctx is not None and ctx.batch_axes is not None
+            and ctx.model_axis is not None
+            and cfg.num_experts % ctx.mesh.shape[ctx.model_axis] == 0):
+        return _moe_apply_shardmap(p, cfg, x, capacity_factor, ctx)
+    return _moe_apply_global(p, cfg, x, capacity_factor)
+
+
+def _dispatch_ffn(tokens, wi, wg, wo, expert_ids, gate_vals, e: int,
+                  k: int, cap: int, dtype):
+    """Sort-based capacity dispatch over ``e`` (local) experts.
+    expert_ids entries outside [0, e) are dropped (non-local)."""
+    t = tokens.shape[0]
+    d = tokens.shape[1]
+    flat_expert = expert_ids.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(-1)
+    valid = (flat_expert >= 0) & (flat_expert < e)
+    sort_key = jnp.where(valid, flat_expert, e)
+    order = jnp.argsort(sort_key)
+    sorted_expert = sort_key[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    first_idx = jnp.searchsorted(sorted_expert, sorted_expert, side="left")
+    pos_in_expert = jnp.arange(t * k, dtype=jnp.int32) \
+        - first_idx.astype(jnp.int32)
+    keep = (sorted_expert < e) & (pos_in_expert < cap)
+    slot = jnp.where(keep, sorted_expert * cap + pos_in_expert, e * cap)
+    buf = jnp.zeros((e * cap + 1, d), dtype=dtype)
+    buf = buf.at[slot].set(tokens[sorted_token].astype(dtype))
+    expert_in = buf[:e * cap].reshape(e, cap, d)
+
+    def ffn(wi_, wg_, wo_, h):
+        return mlp_apply({"wi": wi_, "wg": wg_, "wo": wo_}, h, "swiglu")
+
+    expert_out = jax.vmap(ffn)(wi, wg, wo, expert_in)
+    flat_out = expert_out.reshape(e * cap, d)
+    gathered = flat_out[jnp.where(keep, slot, 0)]
+    contrib = jnp.where(keep[:, None],
+                        gathered * sorted_gate[:, None].astype(dtype), 0.0)
+    out = jnp.zeros((t, d), dtype=jnp.float32)
+    out = out.at[sorted_token].add(contrib.astype(jnp.float32))
+    return out
+
+
+def _moe_apply_shardmap(p, cfg: ArchConfig, x, capacity_factor, ctx):
+    from jax.sharding import PartitionSpec as P
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+    m_size = ctx.mesh.shape[ctx.model_axis]
+    e_loc = e // m_size
+    dp = ctx.batch_axes
+
+    def local_fn(tokens, router, wi, wg, wo):
+        # tokens (Tl, d): this data-shard's tokens (replicated over model)
+        # wi/wg/wo (e_loc, d, f): this model-shard's experts
+        # constraints are meaningless under manual axes — mask them off
+        from ..distributed.act_sharding import activation_sharding
+        with activation_sharding(None):
+            return _local_moe(tokens, router, wi, wg, wo)
+
+    def _local_moe(tokens, router, wi, wg, wo):
+        tl = tokens.shape[0]
+        j = jax.lax.axis_index(ctx.model_axis)
+        logits = tokens.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+        local_ids = expert_ids - j * e_loc          # non-local → dropped
+        cap = min(tl * k, max(k, int(capacity_factor * tl * k / e)))
+        partial = _dispatch_ffn(tokens, wi, wg, wo, local_ids, gate_vals,
+                                e_loc, k, cap, tokens.dtype)
+        return jax.lax.psum(partial, ctx.model_axis).astype(tokens.dtype)
+
+    tokens = x.reshape(b * s, d)
+    fn = jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, None), P(), P(ctx.model_axis, None, None),
+                  P(ctx.model_axis, None, None),
+                  P(ctx.model_axis, None, None)),
+        out_specs=P(dp, None), check_vma=False)
+    out = fn(tokens, p["router"], p["wi"], p["wg"], p["wo"])
+    out = out.reshape(b, s, d)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, "swiglu")
+    return out
+
+
+def _moe_apply_global(p: dict, cfg: ArchConfig, x: jnp.ndarray,
+                      capacity_factor: float | None = None) -> jnp.ndarray:
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+    from ..distributed.act_sharding import constrain_rows
+    tokens = constrain_rows(x.reshape(b * s, d))
+    t = tokens.shape[0]
+
+    logits = (tokens.astype(jnp.float32) @ p["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = min(t * k, max(k, int(capacity_factor * t * k / e)))
+
+    flat_expert = expert_ids.reshape(-1)                       # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                           # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # position within the expert's run via searchsorted (O(T·k) memory —
+    # a (T·k, E) one-hot cumsum is gigabytes at 1M tokens)
+    first_idx = jnp.searchsorted(sorted_expert, sorted_expert, side="left")
+    pos_in_expert = jnp.arange(t * k, dtype=jnp.int32) \
+        - first_idx.astype(jnp.int32)
+    keep = pos_in_expert < cap
+    slot = sorted_expert * cap + jnp.where(keep, pos_in_expert, 0)
+
+    # pack tokens into (E*C, d); dropped assignments write to a trash row
+    from ..distributed.act_sharding import constrain_tp
+    buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype)
+    write = jnp.where(keep, slot, e * cap)
+    buf = buf.at[write].set(constrain_rows(tokens[sorted_token]))
+    # expert-parallel: the (E, C, d) buffers shard over the model axis
+    expert_in = constrain_tp(buf[:e * cap].reshape(e, cap, d), 0)
+
+    def ffn(wi, wg, wo, h):
+        return mlp_apply({"wi": wi, "wg": wg, "wo": wo}, h, "swiglu")
+
+    expert_out = constrain_tp(
+        jax.vmap(ffn)(p["wi"], p["wg"], p["wo"], expert_in), 0)
+    flat_out = expert_out.reshape(e * cap, d)
+
+    # scatter back, gate-weighted; token-major intermediates are pinned
+    # to the data axes (the gather from the expert-sharded flat_out is
+    # the EP all-to-all)
+    gathered = constrain_rows(flat_out[jnp.where(keep, slot, 0)])
+    contrib = jnp.where(keep[:, None],
+                        gathered * sorted_gate[:, None].astype(x.dtype),
+                        0.0)
+    out = jnp.zeros((t, d), dtype=jnp.float32)
+    out = constrain_rows(
+        out.at[sorted_token].add(contrib.astype(jnp.float32)))
+    out = out.astype(x.dtype)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], tokens, "swiglu")
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(p: dict, cfg: ArchConfig,
+                          x: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary loss (importance × load)."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    probs = jax.nn.softmax(tokens.astype(jnp.float32) @ p["router"], -1)
+    _, ids = jax.lax.top_k(probs, cfg.experts_per_token)
+    load = jnp.mean(
+        jax.nn.one_hot(ids, cfg.num_experts, dtype=jnp.float32),
+        axis=(0, 1))
+    importance = jnp.mean(probs, axis=0)
+    return cfg.num_experts * jnp.sum(load * importance)

@@ -1,0 +1,5 @@
+"""Serving: batched decode scheduling (decode_step itself lives in
+models.lm; the sharded cache rules in distributed.sharding)."""
+from .batcher import BatchedDecoder, Request
+
+__all__ = ["BatchedDecoder", "Request"]

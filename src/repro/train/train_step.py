@@ -1,0 +1,97 @@
+"""train_step / serve_step builders — the functions the launcher jits.
+
+``make_train_step`` closes over (cfg, opt_cfg, n_micro): the global batch
+is split into ``n_micro`` microbatches scanned sequentially with fp32
+gradient accumulation (activation memory ∝ 1/n_micro; the optimizer step
+happens once). This is also where gradient compression hooks in.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.lm import decode_step, loss_fn
+from .optimizer import OptimizerConfig, adamw_update
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                    n_micro: int = 1,
+                    grad_transform: Callable[[Any], Any] | None = None,
+                    grad_shardings: Any = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``grad_shardings`` (a NamedSharding tree matching params)
+    pins the fp32 grad accumulator to the ZeRO-3 layout — without it the
+    partitioner may replicate the scan carry (full fp32 params per
+    device)."""
+
+    def constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def split_micro(batch):
+        def r(a):
+            b = a.shape[0]
+            return a.reshape(n_micro, b // n_micro, *a.shape[1:])
+        return jax.tree.map(r, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch))(params)
+            grads = constrain(grads)
+        else:
+            micro = split_micro(batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, mb))(params)
+                acc_l, acc_g = acc
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_l + l, constrain(acc_g)), ()
+
+            zero = (jnp.zeros((), jnp.float32),
+                    constrain(jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)))
+            (loss, grads), _ = jax.lax.scan(body, zero, micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig):
+    def eval_step(params, batch):
+        return loss_fn(params, cfg, batch)
+    return eval_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """serve_step(params, cache, tokens, pos) -> (logits, cache)."""
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos)
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """Prefill lowers the full forward + last-position logits (the KV-cache
+    fill is accounted by the same ops; serving uses decode_step after)."""
+    from ..models.lm import cast_params, forward, lm_head_weight
+
+    def prefill_step(params, batch):
+        x = forward(params, cfg, batch)
+        w = lm_head_weight(cast_params(params, cfg), cfg)
+        return (x[:, -1:] @ w).astype(jnp.float32)
+
+    return prefill_step

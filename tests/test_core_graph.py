@@ -1,0 +1,69 @@
+"""Graph substrate: CSR invariants, generators, oracles."""
+import numpy as np
+import pytest
+
+from repro.core import (from_edges, grid_road_network,
+                        random_geometric_network, dijkstra,
+                        bidirectional_dijkstra, is_connected)
+
+
+def test_from_edges_roundtrip():
+    g = from_edges(4, np.array([0, 1, 2]), np.array([1, 2, 3]),
+                   np.array([1.0, 2.0, 3.0]))
+    assert g.num_vertices == 4
+    assert g.num_edges == 3
+    nbrs, w = g.neighbors(1)
+    assert sorted(nbrs.tolist()) == [0, 2]
+    u, v, ww = g.edge_list()
+    assert len(u) == 3 and np.all(u < v)
+
+
+def test_self_loops_dropped():
+    g = from_edges(3, np.array([0, 1, 1]), np.array([1, 1, 2]),
+                   np.array([1.0, 5.0, 2.0]))
+    assert g.num_edges == 2
+
+
+def test_grid_network_connected():
+    g = grid_road_network(12, 9, seed=3)
+    assert g.num_vertices == 108
+    assert is_connected(g)
+
+
+def test_geometric_network_connected():
+    g = random_geometric_network(200, seed=1)
+    assert g.num_vertices == 200
+    assert is_connected(g)
+
+
+def test_dijkstra_line_graph():
+    g = from_edges(4, np.array([0, 1, 2]), np.array([1, 2, 3]),
+                   np.array([1.0, 2.0, 3.0]))
+    d = dijkstra(g, 0)
+    np.testing.assert_allclose(d, [0, 1, 3, 6])
+
+
+def test_bidirectional_matches_dijkstra():
+    g = grid_road_network(8, 8, seed=0)
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        s, t = rng.integers(0, g.num_vertices, size=2)
+        ref = dijkstra(g, int(s))[int(t)]
+        assert bidirectional_dijkstra(g, int(s), int(t)) == pytest.approx(
+            float(ref), rel=1e-6)
+
+
+def test_with_weights_updates():
+    g = from_edges(2, np.array([0]), np.array([1]), np.array([5.0]))
+    g2 = g.with_weights(g.weights * 2)
+    assert dijkstra(g2, 0)[1] == pytest.approx(10.0)
+
+
+def test_dense_adjacency_subgraph():
+    g = from_edges(4, np.array([0, 1, 2]), np.array([1, 2, 3]),
+                   np.array([1.0, 2.0, 3.0]))
+    adj = g.dense_adjacency(np.array([1, 2, 3]))
+    assert adj.shape == (3, 3)
+    assert adj[0, 1] == pytest.approx(2.0)
+    assert np.isinf(adj[0, 2])
+    assert adj[0, 0] == 0.0

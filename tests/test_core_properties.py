@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (bfs_grow_partition, border_mask, borders_of,
+                        build_all_local_indexes,
+                        build_border_labels_hierarchical,
+                        build_border_labels_reference, certified_local_query,
+                        dijkstra, from_edges, is_connected, pll)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def connected_graphs(draw, max_n=28):
+    """Random connected graph: a random tree plus random extra edges, with
+    positive integer-ish weights (exact float32 arithmetic)."""
+    n = draw(st.integers(min_value=2, max_value=max_n))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    us = list(range(1, n))
+    vs = [int(rng.integers(0, i)) for i in range(1, n)]
+    extra = int(rng.integers(0, 2 * n))
+    eu = rng.integers(0, n, size=extra)
+    ev = rng.integers(0, n, size=extra)
+    keep = eu != ev
+    us = np.concatenate([np.array(us, dtype=np.int64), eu[keep]])
+    vs = np.concatenate([np.array(vs, dtype=np.int64), ev[keep]])
+    w = rng.integers(1, 64, size=len(us)).astype(np.float32)
+    return from_edges(n, us, vs, w), seed
+
+
+@given(connected_graphs())
+@settings(**SETTINGS)
+def test_pll_2hop_cover_property(gs):
+    g, seed = gs
+    labels = pll(g)
+    rng = np.random.default_rng(seed)
+    n = g.num_vertices
+    for _ in range(10):
+        s, t = int(rng.integers(n)), int(rng.integers(n))
+        ref = float(dijkstra(g, s)[t])
+        got = labels.query(s, t)
+        assert abs(got - ref) <= 1e-3, (s, t, got, ref)
+
+
+@given(connected_graphs(), st.integers(min_value=2, max_value=5))
+@settings(**SETTINGS)
+def test_border_labeling_theorem1_property(gs, m):
+    g, seed = gs
+    part = bfs_grow_partition(g, m, seed=seed % 1000)
+    bl = build_border_labels_reference(g, part)
+    rng = np.random.default_rng(seed)
+    n = g.num_vertices
+    for _ in range(10):
+        s, t = int(rng.integers(n)), int(rng.integers(n))
+        if part.assignment[s] == part.assignment[t]:
+            continue
+        ref = float(dijkstra(g, s)[t])
+        assert abs(bl.query(s, t) - ref) <= 1e-3
+
+
+@given(connected_graphs(), st.integers(min_value=2, max_value=4))
+@settings(**SETTINGS)
+def test_builders_agree_property(gs, m):
+    g, seed = gs
+    part = bfs_grow_partition(g, m, seed=seed % 997)
+    ref = build_border_labels_reference(g, part)
+    hier = build_border_labels_hierarchical(g, part)
+    rng = np.random.default_rng(seed + 1)
+    n = g.num_vertices
+    ss = rng.integers(0, n, size=20)
+    ts = rng.integers(0, n, size=20)
+    np.testing.assert_allclose(ref.query_many(ss, ts),
+                               hier.query_many(ss, ts), rtol=1e-5)
+
+
+@given(connected_graphs(), st.integers(min_value=2, max_value=4))
+@settings(**SETTINGS)
+def test_local_bound_never_unsafe_property(gs, m):
+    """Theorem 3: every certified local answer equals the true distance;
+    uncertified answers are still upper bounds."""
+    g, seed = gs
+    part = bfs_grow_partition(g, m, seed=seed % 991)
+    locals_plain = build_all_local_indexes(g, part, bl=None)
+    rng = np.random.default_rng(seed + 2)
+    n = g.num_vertices
+    for _ in range(15):
+        s, t = int(rng.integers(n)), int(rng.integers(n))
+        i = int(part.assignment[s])
+        if i != part.assignment[t]:
+            continue
+        d, ok = certified_local_query(locals_plain[i], s, t)
+        ref = float(dijkstra(g, s)[t])
+        if ok:
+            assert abs(d - ref) <= 1e-3
+        else:
+            assert d >= ref - 1e-3
+
+
+@given(connected_graphs(), st.integers(min_value=1, max_value=5))
+@settings(**SETTINGS)
+def test_partition_invariants(gs, m):
+    g, seed = gs
+    part = bfs_grow_partition(g, m, seed=seed % 983)
+    n = g.num_vertices
+    # mutually exclusive + exhaustive (Definition 3)
+    assert part.assignment.shape == (n,)
+    assert part.assignment.min() >= 0
+    assert part.assignment.max() < part.num_districts
+    # Definition 4: border iff has a cross edge
+    mask = border_mask(g, part)
+    for v in range(n):
+        nbrs, _ = g.neighbors(v)
+        has_cross = bool(
+            (part.assignment[nbrs] != part.assignment[v]).any())
+        assert bool(mask[v]) == has_cross
+    # borders_of partitions the mask
+    total = sum(len(b) for b in borders_of(g, part))
+    assert total == int(mask.sum())
+
+
+@given(connected_graphs())
+@settings(**SETTINGS)
+def test_triangle_inequality_of_labels(gs):
+    """Stored label distances always dominate the true distance and are
+    symmetric under query order."""
+    g, seed = gs
+    labels = pll(g)
+    rng = np.random.default_rng(seed + 3)
+    n = g.num_vertices
+    for _ in range(10):
+        s, t = int(rng.integers(n)), int(rng.integers(n))
+        assert labels.query(s, t) == labels.query(t, s)

@@ -1,0 +1,59 @@
+"""Flash-attention kernel vs dense-softmax oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+CASES = [
+    # (B, S, T, H, KV, hd, causal)
+    (1, 16, 16, 4, 4, 32, True),
+    (2, 32, 32, 4, 2, 32, True),
+    (1, 64, 64, 8, 2, 16, False),
+    (2, 24, 24, 6, 2, 32, True),      # S not a block multiple
+    (1, 128, 128, 4, 1, 64, True),    # MQA
+]
+
+
+@pytest.mark.parametrize("b,s,t,h,kv,hd,causal", CASES)
+def test_flash_matches_ref(b, s, t, h, kv, hd, causal):
+    key = jax.random.PRNGKey(s * 7 + h)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype=jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kv, hd), dtype=jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kv, hd), dtype=jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=16, bk=16,
+                                 interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 32, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 32, 4, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 32, 4, 32)).astype(dtype)
+    got = flash_attention_pallas(q, k, v, bq=16, bk=16, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        rtol=3e-2, atol=3e-2)
+    assert got.dtype == dtype
+
+
+def test_flash_block_shape_invariance():
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    outs = [flash_attention_pallas(q, k, v, bq=bq, bk=bk, interpret=True)
+            for bq, bk in [(16, 16), (32, 16), (16, 32), (64, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)

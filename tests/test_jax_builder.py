@@ -1,0 +1,53 @@
+"""JAX pipeline builder vs numpy reference — same index, same answers."""
+import numpy as np
+import pytest
+
+from repro.core import (bfs_grow_partition, build_border_labels_reference,
+                        dijkstra, grid_road_network,
+                        random_geometric_network)
+from repro.core.jax_builder import build_border_labels_jax, pack_districts
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_jax_builder_matches_reference(use_pallas):
+    g = grid_road_network(6, 6, seed=0)
+    part = bfs_grow_partition(g, 3, seed=0)
+    ref = build_border_labels_reference(g, part)
+    got = build_border_labels_jax(g, part, use_pallas=use_pallas)
+    assert got.num_borders == ref.num_borders
+    rng = np.random.default_rng(0)
+    ss = rng.integers(0, g.num_vertices, size=50)
+    ts = rng.integers(0, g.num_vertices, size=50)
+    np.testing.assert_allclose(got.query_many(ss, ts),
+                               ref.query_many(ss, ts), rtol=1e-5)
+
+
+def test_jax_builder_prune_matches_reference_exactly():
+    g = grid_road_network(6, 6, seed=5)
+    g = g.with_weights(np.ceil(g.weights))
+    part = bfs_grow_partition(g, 3, seed=1)
+    ref = build_border_labels_reference(g, part)
+    got = build_border_labels_jax(g, part)
+    np.testing.assert_array_equal(np.isfinite(ref.table),
+                                  np.isfinite(got.table))
+
+
+def test_jax_builder_unpruned_is_full_bprime():
+    """Unpruned B' must hold the true distance to EVERY border (Eq. 2)."""
+    g = random_geometric_network(60, seed=2)
+    part = bfs_grow_partition(g, 3, seed=0)
+    got = build_border_labels_jax(g, part, prune=False)
+    for j, b in enumerate(got.border_ids):
+        ref = dijkstra(g, int(b))
+        np.testing.assert_allclose(got.table[:, j], ref, rtol=1e-5)
+
+
+def test_pack_districts_shapes():
+    g = grid_road_network(5, 7, seed=1)
+    part = bfs_grow_partition(g, 4, seed=0)
+    packed = pack_districts(g, part)
+    assert packed.adj.shape[0] == part.num_districts
+    assert packed.adj.shape[1] == packed.adj.shape[2] == packed.kmax
+    # every real vertex appears exactly once
+    ids = packed.vertex_ids[packed.vertex_ids >= 0]
+    assert sorted(ids.tolist()) == list(range(g.num_vertices))

@@ -1,0 +1,63 @@
+"""Sharded (districts→devices) oracle == single-process oracle.
+
+The 1-device case runs in-process; the 8-device case re-executes this file
+in a subprocess with XLA_FLAGS so the main test session keeps seeing a
+single CPU device (the dry-run is the only other multi-device consumer).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+def _build_case():
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import (DistanceOracle, bfs_grow_partition,
+                            grid_road_network)
+    from repro.edge import pack_for_mesh, prepare_queries, sharded_query
+
+    g = grid_road_network(8, 8, seed=31)
+    part = bfs_grow_partition(g, 4, seed=0)
+    oracle = DistanceOracle.build(g, part)
+    ndev = len(jax.devices())
+    data = pack_for_mesh(part, oracle.border_labels, oracle.local_indexes,
+                         ndev)
+    mesh = Mesh(np.array(jax.devices()).reshape(ndev), ("edge",))
+    rng = np.random.default_rng(7)
+    ss = rng.integers(0, g.num_vertices, size=200)
+    ts = rng.integers(0, g.num_vertices, size=200)
+    queries = prepare_queries(part, oracle.local_indexes, ss, ts)
+    got = sharded_query(data, mesh, queries)
+    ref = oracle.query_many(ss, ts)
+    return got, ref
+
+
+def test_sharded_oracle_single_device_matches():
+    got, ref = _build_case()
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_sharded_oracle_eight_devices_matches():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    code = (
+        "import numpy as np, jax; assert len(jax.devices()) == 8;"
+        "import tests.test_sharded_oracle as m;"
+        "got, ref = m._build_case();"
+        "np.testing.assert_allclose(got, ref, rtol=1e-5);"
+        "print('OK8')"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=500,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK8" in out.stdout
