@@ -1,9 +1,11 @@
-"""Fig. 5 analogue: per-query response time.
+"""Fig. 5 analogue: per-query response time + batched engine throughput.
 
 Hub-labeling methods (ours = BL + district L_i⁺) answer in microseconds;
 online bidirectional Dijkstra is the millisecond-level baseline family.
 Batched joins (the TPU serving layout) are reported separately — that's
-the number the edge deployment actually serves at.
+the number the edge deployment actually serves at: the second section
+sweeps ``EdgeSystem.query_batched`` (the single-dispatch combined-table
+engine) over batch sizes 64–4096 against the per-query Python loop.
 """
 from __future__ import annotations
 
@@ -11,11 +13,14 @@ import numpy as np
 
 from repro.core import (DistanceOracle, bidirectional_dijkstra,
                         grid_partition, grid_road_network, pll)
+from repro.edge import EdgeSystem
 
 from .common import emit, timeit
 
 NUM_QUERIES = 10_000
 BIDIJ_QUERIES = 50
+ENGINE_BATCH_SIZES = (64, 256, 1024, 4096)
+ENGINE_LOOP_QUERIES = 1024
 
 
 def run() -> None:
@@ -46,6 +51,36 @@ def run() -> None:
                     warmup=0)
     emit("query/BiDijkstra", sec / BIDIJ_QUERIES * 1e6,
          "online-search baseline")
+
+    run_engine(g, part, rng)
+
+
+def run_engine(g=None, part=None, rng=None) -> None:
+    """Batched edge-serving engine: queries/sec at batch sizes 64–4096
+    versus the single-query Python path through the same EdgeSystem."""
+    if g is None:
+        g = grid_road_network(50, 50, seed=7)
+        part = grid_partition(g, 50, 50, 3, 4)
+        rng = np.random.default_rng(1)
+    system = EdgeSystem.deploy(g, part)
+
+    ss = rng.integers(0, g.num_vertices, size=ENGINE_LOOP_QUERIES)
+    ts = rng.integers(0, g.num_vertices, size=ENGINE_LOOP_QUERIES)
+    _, loop_sec = timeit(lambda: system.query_loop(ss, ts), repeats=2)
+    loop_us = loop_sec / ENGINE_LOOP_QUERIES * 1e6
+    emit("engine/single-query-loop", loop_us, "per-call python path")
+
+    speedup_1024 = None
+    for b in ENGINE_BATCH_SIZES:
+        sb = rng.integers(0, g.num_vertices, size=b)
+        tb = rng.integers(0, g.num_vertices, size=b)
+        _, sec = timeit(lambda: system.query_batched(sb, tb), repeats=5)
+        qps = b / sec
+        if b == 1024:
+            speedup_1024 = loop_sec / ENGINE_LOOP_QUERIES / (sec / b)
+        emit(f"engine/batched-{b}", sec / b * 1e6, f"qps={qps:,.0f}")
+    emit("engine/speedup-vs-loop-1024", speedup_1024,
+         "x faster per query at batch 1024")
 
 
 if __name__ == "__main__":

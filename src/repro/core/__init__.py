@@ -16,7 +16,8 @@ from .shortcuts import border_shortcut_matrix, shortcut_edges
 from .local_index import LocalIndex, build_local_index, \
     build_all_local_indexes
 from .query import (Rule, route, cross_district_query, same_district_query,
-                    local_bound, certified_local_query, query_batch)
+                    local_bound, certified_local_query, bucket_by_rule,
+                    query_batch)
 from .oracle import DistanceOracle, BuildStats
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -61,6 +61,24 @@ class SparseLabels:
         return np.min(np.where(eq, tot, INF), axis=(1, 2),
                       initial=INF).astype(np.float32)
 
+    def to_dense_hub_table(self, num_hubs: int | None = None) -> np.ndarray:
+        """Densify to the hub-aligned layout (inverse of
+        ``BorderLabels.to_sparse``): ``table[v, h]`` is the stored
+        distance from v to hub h, +inf where h is not a hub of v. Valid
+        when hub ids are dense in [0, num_hubs) — true for local indexes,
+        whose hubs are local vertex ids. This is the batched-serving
+        layout: a 2-hop join becomes the same fused ``min(row_s + row_t)``
+        reduction BorderLabels uses (``kernels/label_join``)."""
+        if num_hubs is None:
+            num_hubs = max(self.num_vertices, int(self.hubs.max()) + 1)
+        table = np.full((self.num_vertices, num_hubs), INF,
+                        dtype=np.float32)
+        rows = np.repeat(np.arange(self.num_vertices), self.width)
+        hubs = self.hubs.ravel()
+        mask = hubs >= 0
+        table[rows[mask], hubs[mask]] = self.dists.ravel()[mask]
+        return table
+
 
 @dataclass
 class BorderLabels:

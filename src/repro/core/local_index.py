@@ -33,6 +33,9 @@ class LocalIndex:
     # distances from every local vertex to every district border, via the
     # local labels only — precomputed once, powers LB in O(b) per endpoint
     border_dist: np.ndarray = field(default=None)  # type: ignore[assignment]
+    # lazily-built dense hub-aligned table (see dense_table); hubs of L_i
+    # are local ids, so the hub axis is the district's own vertex range
+    _dense: np.ndarray | None = field(default=None, repr=False)
 
     def __post_init__(self):
         if self.border_dist is None:
@@ -49,6 +52,41 @@ class LocalIndex:
 
     def query_local(self, s_local: int, t_local: int) -> float:
         return self.labels.query(s_local, t_local)
+
+    def dense_table(self) -> np.ndarray:
+        """Hub-aligned dense layout of the local labels: ``(k, k)`` float32
+        with ``table[v, h] = λ-entry dist(v, h)`` and +inf where ``h`` is
+        not a hub of ``v`` — the same TPU serving layout as BorderLabels
+        (slot j ≡ local vertex j), so same-district joins run through the
+        identical dense ``label_join`` kernel as rule-3. Built once per
+        index version and cached; O(k²) floats is the price of keeping the
+        serving join O(k) instead of the sparse O(L²) mask."""
+        if self._dense is None:
+            self._dense = self.labels.to_dense_hub_table(
+                self.labels.num_vertices)
+        return self._dense
+
+    def query_local_many(self, s_locals: np.ndarray, t_locals: np.ndarray,
+                         use_kernels: bool = True) -> np.ndarray:
+        """Vectorized λ(s,t,L_i) for a bucket of same-district queries
+        (local ids). Routed through the dense label_join kernel over the
+        hub-aligned table by default."""
+        if use_kernels:
+            from ..kernels.label_join import ops as lj
+            return lj.join_gathered(self.dense_table(), s_locals, t_locals)
+        return self.labels.query_many(s_locals, t_locals)
+
+    def local_bound_many(self, s_locals: np.ndarray, t_locals: np.ndarray,
+                         use_kernels: bool = True) -> np.ndarray:
+        """Vectorized Definition-5 Local Bound over the precomputed
+        vertex→border distance table."""
+        if use_kernels:
+            from ..kernels.label_join import ops as lj
+            return lj.bound_gathered(self.border_dist, s_locals, t_locals)
+        if len(self.border_locals) == 0:
+            return np.full(len(s_locals), INF, dtype=np.float32)
+        return (self.border_dist[s_locals].min(axis=1)
+                + self.border_dist[t_locals].min(axis=1)).astype(np.float32)
 
     def size_bytes(self) -> int:
         return self.labels.size_bytes()

@@ -69,23 +69,51 @@ def certified_local_query(idx: LocalIndex, s: int, t: int
     return float(lam), bool(lam <= lb)
 
 
+def bucket_by_rule(assignment: np.ndarray, ss: np.ndarray, ts: np.ndarray,
+                   client_districts: np.ndarray | None = None
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized §4.2 routing for a whole batch in one NumPy pass.
+
+    Returns (ds, dt, rules): per-query source/target districts plus the
+    Rule value each query falls under (rule 2 only differs from rule 1
+    when the client submitted from a district other than s's)."""
+    ds = assignment[ss].astype(np.int32)
+    dt = assignment[ts].astype(np.int32)
+    client = ds if client_districts is None \
+        else np.asarray(client_districts, dtype=np.int32)
+    rules = np.where(ds != dt, np.int32(Rule.CROSS),
+                     np.where(ds == client, np.int32(Rule.LOCAL),
+                              np.int32(Rule.FORWARD_EDGE)))
+    return ds, dt, rules
+
+
 def query_batch(bl: BorderLabels, locals_: list[LocalIndex],
-                assignment: np.ndarray, ss: np.ndarray, ts: np.ndarray
-                ) -> np.ndarray:
-    """Batched routing + answering (the shape the TPU serving path uses:
-    bucket by rule, answer rule-1/2 inside the shard, rule-3 via B)."""
+                assignment: np.ndarray, ss: np.ndarray, ts: np.ndarray,
+                use_kernels: bool = False) -> np.ndarray:
+    """Batched routing + answering: bucket by rule in one pass, answer
+    rule-1/2 per district, rule-3 via B, and consolidate with a single
+    scatter per bucket. Host-NumPy reference by default — the serving hot
+    path is ``EdgeSystem.query_batched`` (single-dispatch engine over the
+    label_join kernels); ``use_kernels=True`` routes the per-bucket joins
+    through those kernels too."""
     ss = np.asarray(ss, dtype=np.int64)
     ts = np.asarray(ts, dtype=np.int64)
     out = np.full(len(ss), INF, dtype=np.float32)
-    ds, dt = assignment[ss], assignment[ts]
-    cross = ds != dt
-    if cross.any():
-        out[cross] = bl.query_many(ss[cross], ts[cross])
+    ds, _, rules = bucket_by_rule(assignment, ss, ts)
+    cross_idx = np.nonzero(rules == np.int32(Rule.CROSS))[0]
+    if len(cross_idx):
+        if use_kernels:
+            from ..kernels.label_join import ops as lj
+            out[cross_idx] = lj.join_gathered(bl.table, ss[cross_idx],
+                                              ts[cross_idx])
+        else:
+            out[cross_idx] = bl.query_many(ss[cross_idx], ts[cross_idx])
+    same = rules != np.int32(Rule.CROSS)
     for i, idx in enumerate(locals_):
-        sel = (~cross) & (ds == np.int32(i))
-        if not sel.any():
+        sel = np.nonzero(same & (ds == np.int32(i)))[0]
+        if not len(sel):
             continue
         sl = idx.local_of(ss[sel])
         tl = idx.local_of(ts[sel])
-        out[sel] = idx.labels.query_many(sl, tl)
+        out[sel] = idx.query_local_many(sl, tl, use_kernels=use_kernels)
     return out

@@ -5,8 +5,9 @@ from .topology import LatencyModel, Topology
 from .center import ComputingCenter
 from .server import EdgeServer
 from .router import EdgeSystem
-from .simulator import (QueryEvent, SimResult, UpdateSchedule, make_trace,
-                        simulate_centralized, simulate_edge)
+from .engine import BatchedQueryEngine
+from .simulator import (BatchPolicy, QueryEvent, SimResult, UpdateSchedule,
+                        make_trace, simulate_centralized, simulate_edge)
 from .sharded_oracle import (ShardedOracleData, pack_for_mesh,
                              prepare_queries, make_sharded_query_fn,
                              sharded_query)

@@ -54,6 +54,12 @@ class ComputingCenter:
         assert self.border_labels is not None
         return self.border_labels.query(s, t)
 
-    def answer_cross_many(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
+    def answer_cross_many(self, ss: np.ndarray, ts: np.ndarray,
+                          use_kernels: bool = True) -> np.ndarray:
+        """Rule-3 bucket: one dense join over gathered B rows (the
+        label_join Pallas kernel on accelerator backends)."""
         assert self.border_labels is not None
+        if use_kernels:
+            from ..kernels.label_join import ops as lj
+            return lj.join_gathered(self.border_labels.table, ss, ts)
         return self.border_labels.query_many(ss, ts)

@@ -83,6 +83,35 @@ class EdgeServer:
         lb = local_bound(idx, sl, tl)
         return float(lam), bool(lam <= lb)
 
+    # -- batched query paths (the vectorized serving engine) ----------------
+
+    def answer_exact_batch(self, ss: np.ndarray, ts: np.ndarray,
+                           use_kernels: bool = True) -> np.ndarray | None:
+        """Rule-1/2 bucket via L_i⁺ and the sparse label_join kernel;
+        None if shortcuts not installed yet."""
+        if self.augmented is None:
+            return None
+        idx = self.augmented
+        return idx.query_local_many(idx.local_of(ss), idx.local_of(ts),
+                                    use_kernels=use_kernels)
+
+    def answer_certified_batch(self, ss: np.ndarray, ts: np.ndarray,
+                               use_kernels: bool = True
+                               ) -> tuple[np.ndarray, np.ndarray]:
+        """Theorem-3 bucket on plain L_i: λ via the sparse label join, LB
+        via the fused join_with_bound certificate pass (no second HBM
+        sweep). Returns (λ, certified)."""
+        idx = self.plain
+        sl, tl = idx.local_of(ss), idx.local_of(ts)
+        if use_kernels:
+            from ..kernels.label_join import ops as lj
+            lam = lj.join_sparse_gathered(idx.labels.hubs, idx.labels.dists,
+                                          sl, tl)
+        else:
+            lam = idx.labels.query_many(sl, tl)
+        lb = idx.local_bound_many(sl, tl, use_kernels=use_kernels)
+        return lam, lam <= lb
+
 
 def _build_plain(g: Graph, part: Partition, district_id: int) -> LocalIndex:
     vertices = np.nonzero(part.assignment == np.int32(district_id))[0] \

@@ -26,6 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                    # jax >= 0.5 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from ..core.labels import BorderLabels
 from ..core.local_index import LocalIndex
 from ..core.partition import Partition
@@ -119,7 +124,7 @@ def make_sharded_query_fn(mesh: Mesh, axis: str = "edge"):
         ans = jnp.minimum(ans, jnp.where(mine_cross, cross_ans, jnp.inf))
         return jax.lax.pmin(ans, axis)
 
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         _device_fn, mesh=mesh,
         in_specs=(P(axis), P(axis), P(), {k: P() for k in
                   ("s_glob", "t_glob", "district", "cross",

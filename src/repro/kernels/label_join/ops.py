@@ -3,13 +3,23 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import join_lb_pallas, join_pallas
 from .ref import join_ref, join_sparse_ref, local_bound_ref
 
+# Batch-size bucket for gathered serving calls: host-side padding up to a
+# multiple of PAD_Q keeps the number of distinct jit shapes (and hence
+# retraces) bounded no matter how the router buckets a batch.
+PAD_Q = 256
+
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return max(m, -(-n // m) * m)
 
 
 def join(s_rows: jnp.ndarray, t_rows: jnp.ndarray, *,
@@ -33,3 +43,62 @@ def join_sparse(hs, ds, ht, dt) -> jnp.ndarray:
     """Padded sparse-label join (local indexes); pure-XLA — the O(L²)
     mask fits VREGs for the small local label widths."""
     return join_sparse_ref(hs, ds, ht, dt)
+
+
+# -- gathered serving entry points (host arrays in, host arrays out) --------
+
+def join_gathered(table: np.ndarray, ss: np.ndarray, ts: np.ndarray, *,
+                  use_pallas: bool = True) -> np.ndarray:
+    """Rule-3 serving join: gather dense border-label rows ``table[ss]`` /
+    ``table[ts]`` and reduce on device. The batch is inf-padded to a
+    multiple of PAD_Q (padding rows join to +inf and are sliced off)."""
+    qn = len(ss)
+    if qn == 0 or table.shape[1] == 0:
+        return np.full(qn, np.inf, dtype=np.float32)
+    qp = _ceil_to(qn, PAD_Q)
+    s_rows = np.full((qp, table.shape[1]), np.inf, dtype=np.float32)
+    t_rows = np.full((qp, table.shape[1]), np.inf, dtype=np.float32)
+    s_rows[:qn] = table[ss]
+    t_rows[:qn] = table[ts]
+    out = join(jnp.asarray(s_rows), jnp.asarray(t_rows),
+               use_pallas=use_pallas)
+    return np.asarray(out)[:qn]
+
+
+def join_sparse_gathered(hubs: np.ndarray, dists: np.ndarray,
+                         ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
+    """Rule-1/2 serving join over a district's padded sparse labels
+    (local-id queries). Padding rows carry hub -1 → join to +inf."""
+    qn = len(ss)
+    if qn == 0:
+        return np.zeros(0, dtype=np.float32)
+    qp = _ceil_to(qn, PAD_Q)
+    width = hubs.shape[1]
+    hs = -np.ones((qp, width), dtype=np.int32)
+    ht = -np.ones((qp, width), dtype=np.int32)
+    ds = np.full((qp, width), np.inf, dtype=np.float32)
+    dt = np.full((qp, width), np.inf, dtype=np.float32)
+    hs[:qn], ds[:qn] = hubs[ss], dists[ss]
+    ht[:qn], dt[:qn] = hubs[ts], dists[ts]
+    out = join_sparse(jnp.asarray(hs), jnp.asarray(ds),
+                      jnp.asarray(ht), jnp.asarray(dt))
+    return np.asarray(out)[:qn].astype(np.float32)
+
+
+def bound_gathered(border_dist: np.ndarray, ss: np.ndarray,
+                   ts: np.ndarray, *, use_pallas: bool = True) -> np.ndarray:
+    """Theorem-3 serving certificate: LB[i] = min_b bd[ss[i]] + min_b'
+    bd[ts[i]] via the fused join_with_bound pass over gathered
+    vertex→border distance rows (the λ output of the fused kernel is the
+    via-one-border upper bound and is discarded here)."""
+    qn = len(ss)
+    if qn == 0 or border_dist.shape[1] == 0:
+        return np.full(qn, np.inf, dtype=np.float32)
+    qp = _ceil_to(qn, PAD_Q)
+    s_rows = np.full((qp, border_dist.shape[1]), np.inf, dtype=np.float32)
+    t_rows = np.full((qp, border_dist.shape[1]), np.inf, dtype=np.float32)
+    s_rows[:qn] = border_dist[ss]
+    t_rows[:qn] = border_dist[ts]
+    _, lb = join_with_bound(jnp.asarray(s_rows), jnp.asarray(t_rows),
+                            use_pallas=use_pallas)
+    return np.asarray(lb)[:qn]

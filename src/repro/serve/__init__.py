@@ -1,5 +1,8 @@
 """Serving: batched decode scheduling (decode_step itself lives in
-models.lm; the sharded cache rules in distributed.sharding)."""
+models.lm; the sharded cache rules in distributed.sharding) and the
+distance-query micro-batcher feeding EdgeSystem.query_batched."""
 from .batcher import BatchedDecoder, Request
+from .distance_batcher import DistanceBatcher, DistanceRequest
 
-__all__ = ["BatchedDecoder", "Request"]
+__all__ = ["BatchedDecoder", "Request", "DistanceBatcher",
+           "DistanceRequest"]

@@ -1,0 +1,102 @@
+"""Micro-batching queue for distance queries.
+
+The serving front door of the edge deployment: clients submit (s, t)
+requests one at a time; the batcher packs them into fixed-shape groups of
+``batch_size`` (padding short groups with rid=-1 dummy pairs so the
+engine — and hence the device — only ever sees static shapes) and drains
+each group through one vectorized ``engine(ss, ts)`` call, e.g.
+``EdgeSystem.query_batched``. Per-request latency is recorded for the
+serving benchmarks; padding requests never reach ``completed`` or the
+latency statistics.
+
+Host-side orchestration only — the same scheduler shape as the LM
+``serve.batcher.BatchedDecoder``, minus the autoregressive loop: a
+distance batch completes in a single engine call.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclass
+class DistanceRequest:
+    rid: int
+    s: int
+    t: int
+    submitted_s: float = field(default_factory=time.perf_counter)
+    distance: float | None = None
+    finished_s: float | None = None
+
+    @property
+    def latency_s(self) -> float:
+        return (self.finished_s or time.perf_counter()) - self.submitted_s
+
+
+class DistanceBatcher:
+    """Drains queued distance requests through a batched engine.
+
+    ``pad=True`` (default) guarantees the engine always sees exactly
+    ``batch_size`` pairs by filling short tail groups with rid=-1
+    dummies. Note the dummies are real (0, 0) queries from the engine's
+    point of view — engine-side counters (e.g. EdgeSystem.stats) include
+    them. Engines that already pad internally to bounded shapes (like
+    ``EdgeSystem.query_batched``) can run with ``pad=False``."""
+
+    def __init__(self, engine: Callable[[np.ndarray, np.ndarray],
+                                        np.ndarray],
+                 batch_size: int = 256, pad: bool = True):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.engine = engine
+        self.batch_size = batch_size
+        self.pad = pad
+        self.queue: list[DistanceRequest] = []
+        self.completed: list[DistanceRequest] = []
+
+    def submit(self, req: DistanceRequest) -> None:
+        self.queue.append(req)
+
+    def submit_pairs(self, pairs: Sequence[tuple[int, int]],
+                     rid_base: int = 0) -> None:
+        for k, (s, t) in enumerate(pairs):
+            self.submit(DistanceRequest(rid=rid_base + k, s=int(s),
+                                        t=int(t)))
+
+    def _run_group(self, group: list[DistanceRequest]) -> None:
+        ss = np.array([r.s for r in group], dtype=np.int64)
+        ts = np.array([r.t for r in group], dtype=np.int64)
+        dist = np.asarray(self.engine(ss, ts), dtype=np.float32)
+        now = time.perf_counter()
+        for i, r in enumerate(group):
+            r.distance = float(dist[i])
+            r.finished_s = now
+            self.completed.append(r)
+
+    def run(self) -> list[DistanceRequest]:
+        """Drain the queue in fixed-size groups (short tails padded with
+        rid=-1 dummies → static engine shapes); returns completed real
+        requests, padding discarded."""
+        while self.queue:
+            group = [self.queue.pop(0)
+                     for _ in range(min(self.batch_size, len(self.queue)))]
+            while self.pad and len(group) < self.batch_size:
+                group.append(DistanceRequest(rid=-1, s=0, t=0))
+            self._run_group(group)
+        self.completed = [r for r in self.completed if r.rid >= 0]
+        return self.completed
+
+    def latency_stats(self) -> dict[str, float]:
+        """Latency percentiles (ms) over completed real requests."""
+        lat = np.array([r.latency_s for r in self.completed
+                        if r.rid >= 0], dtype=np.float64) * 1e3
+        if len(lat) == 0:
+            return {"count": 0, "mean_ms": 0.0, "p50_ms": 0.0,
+                    "p95_ms": 0.0, "p99_ms": 0.0}
+        return {"count": int(len(lat)), "mean_ms": float(lat.mean()),
+                "p50_ms": float(np.percentile(lat, 50)),
+                "p95_ms": float(np.percentile(lat, 95)),
+                "p99_ms": float(np.percentile(lat, 99))}

@@ -1,6 +1,11 @@
-"""Property-based tests (hypothesis) for the system's core invariants."""
+"""Property-based tests for the system's core invariants.
+
+Runs under ``hypothesis`` when available; in a clean environment without
+it, the same property checks run over a seeded-random parametrization so
+the invariants are still exercised (satisfying tier-1 in minimal envs).
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import (bfs_grow_partition, border_mask, borders_of,
                         build_all_local_indexes,
@@ -8,16 +13,22 @@ from repro.core import (bfs_grow_partition, border_mask, borders_of,
                         build_border_labels_reference, certified_local_query,
                         dijkstra, from_edges, is_connected, pll)
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:          # clean env: seeded fallback below
+    HAVE_HYPOTHESIS = False
+
 SETTINGS = dict(max_examples=20, deadline=None)
+FALLBACK_SEEDS = list(range(1, 13))          # 12 deterministic cases each
 
 
-@st.composite
-def connected_graphs(draw, max_n=28):
+def _random_connected_graph(seed: int, max_n: int = 28):
     """Random connected graph: a random tree plus random extra edges, with
-    positive integer-ish weights (exact float32 arithmetic)."""
-    n = draw(st.integers(min_value=2, max_value=max_n))
-    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    positive integer-ish weights (exact float32 arithmetic). Shared by the
+    hypothesis strategy and the seeded fallback parametrization."""
     rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, max_n + 1))
     us = list(range(1, n))
     vs = [int(rng.integers(0, i)) for i in range(1, n)]
     extra = int(rng.integers(0, 2 * n))
@@ -30,10 +41,9 @@ def connected_graphs(draw, max_n=28):
     return from_edges(n, us, vs, w), seed
 
 
-@given(connected_graphs())
-@settings(**SETTINGS)
-def test_pll_2hop_cover_property(gs):
-    g, seed = gs
+# -- the properties themselves (plain functions, framework-agnostic) --------
+
+def _check_pll_2hop_cover(g, seed):
     labels = pll(g)
     rng = np.random.default_rng(seed)
     n = g.num_vertices
@@ -44,10 +54,7 @@ def test_pll_2hop_cover_property(gs):
         assert abs(got - ref) <= 1e-3, (s, t, got, ref)
 
 
-@given(connected_graphs(), st.integers(min_value=2, max_value=5))
-@settings(**SETTINGS)
-def test_border_labeling_theorem1_property(gs, m):
-    g, seed = gs
+def _check_border_labeling_theorem1(g, seed, m):
     part = bfs_grow_partition(g, m, seed=seed % 1000)
     bl = build_border_labels_reference(g, part)
     rng = np.random.default_rng(seed)
@@ -60,10 +67,7 @@ def test_border_labeling_theorem1_property(gs, m):
         assert abs(bl.query(s, t) - ref) <= 1e-3
 
 
-@given(connected_graphs(), st.integers(min_value=2, max_value=4))
-@settings(**SETTINGS)
-def test_builders_agree_property(gs, m):
-    g, seed = gs
+def _check_builders_agree(g, seed, m):
     part = bfs_grow_partition(g, m, seed=seed % 997)
     ref = build_border_labels_reference(g, part)
     hier = build_border_labels_hierarchical(g, part)
@@ -75,12 +79,9 @@ def test_builders_agree_property(gs, m):
                                hier.query_many(ss, ts), rtol=1e-5)
 
 
-@given(connected_graphs(), st.integers(min_value=2, max_value=4))
-@settings(**SETTINGS)
-def test_local_bound_never_unsafe_property(gs, m):
+def _check_local_bound_never_unsafe(g, seed, m):
     """Theorem 3: every certified local answer equals the true distance;
     uncertified answers are still upper bounds."""
-    g, seed = gs
     part = bfs_grow_partition(g, m, seed=seed % 991)
     locals_plain = build_all_local_indexes(g, part, bl=None)
     rng = np.random.default_rng(seed + 2)
@@ -98,10 +99,7 @@ def test_local_bound_never_unsafe_property(gs, m):
             assert d >= ref - 1e-3
 
 
-@given(connected_graphs(), st.integers(min_value=1, max_value=5))
-@settings(**SETTINGS)
-def test_partition_invariants(gs, m):
-    g, seed = gs
+def _check_partition_invariants(g, seed, m):
     part = bfs_grow_partition(g, m, seed=seed % 983)
     n = g.num_vertices
     # mutually exclusive + exhaustive (Definition 3)
@@ -120,15 +118,76 @@ def test_partition_invariants(gs, m):
     assert total == int(mask.sum())
 
 
-@given(connected_graphs())
-@settings(**SETTINGS)
-def test_triangle_inequality_of_labels(gs):
+def _check_label_query_symmetry(g, seed):
     """Stored label distances always dominate the true distance and are
     symmetric under query order."""
-    g, seed = gs
     labels = pll(g)
     rng = np.random.default_rng(seed + 3)
     n = g.num_vertices
     for _ in range(10):
         s, t = int(rng.integers(n)), int(rng.integers(n))
         assert labels.query(s, t) == labels.query(t, s)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def connected_graphs(draw, max_n=28):
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        return _random_connected_graph(seed, max_n=max_n)
+
+    @given(connected_graphs())
+    @settings(**SETTINGS)
+    def test_pll_2hop_cover_property(gs):
+        _check_pll_2hop_cover(*gs)
+
+    @given(connected_graphs(), st.integers(min_value=2, max_value=5))
+    @settings(**SETTINGS)
+    def test_border_labeling_theorem1_property(gs, m):
+        _check_border_labeling_theorem1(*gs, m)
+
+    @given(connected_graphs(), st.integers(min_value=2, max_value=4))
+    @settings(**SETTINGS)
+    def test_builders_agree_property(gs, m):
+        _check_builders_agree(*gs, m)
+
+    @given(connected_graphs(), st.integers(min_value=2, max_value=4))
+    @settings(**SETTINGS)
+    def test_local_bound_never_unsafe_property(gs, m):
+        _check_local_bound_never_unsafe(*gs, m)
+
+    @given(connected_graphs(), st.integers(min_value=1, max_value=5))
+    @settings(**SETTINGS)
+    def test_partition_invariants(gs, m):
+        _check_partition_invariants(*gs, m)
+
+    @given(connected_graphs())
+    @settings(**SETTINGS)
+    def test_triangle_inequality_of_labels(gs):
+        _check_label_query_symmetry(*gs)
+else:
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    def test_pll_2hop_cover_property(seed):
+        _check_pll_2hop_cover(*_random_connected_graph(seed))
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    def test_border_labeling_theorem1_property(seed):
+        _check_border_labeling_theorem1(
+            *_random_connected_graph(seed), 2 + seed % 4)
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    def test_builders_agree_property(seed):
+        _check_builders_agree(*_random_connected_graph(seed), 2 + seed % 3)
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    def test_local_bound_never_unsafe_property(seed):
+        _check_local_bound_never_unsafe(
+            *_random_connected_graph(seed), 2 + seed % 3)
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    def test_partition_invariants(seed):
+        _check_partition_invariants(
+            *_random_connected_graph(seed), 1 + seed % 5)
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    def test_triangle_inequality_of_labels(seed):
+        _check_label_query_symmetry(*_random_connected_graph(seed))

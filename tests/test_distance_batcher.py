@@ -1,0 +1,87 @@
+"""DistanceBatcher / BatchedDecoder edge cases: empty queue, groups
+smaller than batch_size, and rid=-1 padding never leaking into completed
+requests or latency statistics."""
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import init_params
+from repro.serve import (BatchedDecoder, DistanceBatcher, DistanceRequest,
+                         Request)
+
+
+def _echo_engine(calls):
+    def engine(ss, ts):
+        calls.append((len(ss), len(ts)))
+        return (ss * 10 + ts).astype(np.float32)
+    return engine
+
+
+def test_distance_batcher_empty_queue():
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=4)
+    assert b.run() == []
+    assert calls == []
+    assert b.latency_stats()["count"] == 0
+
+
+def test_distance_batcher_group_smaller_than_batch():
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=8)
+    b.submit_pairs([(1, 2), (3, 4), (5, 6)])
+    done = b.run()
+    # the engine only ever sees the static batch shape
+    assert calls == [(8, 8)]
+    assert [r.rid for r in done] == [0, 1, 2]
+    assert [r.distance for r in done] == [12.0, 34.0, 56.0]
+
+
+def test_distance_batcher_padding_never_leaks():
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=4)
+    b.submit_pairs([(i, i + 1) for i in range(10)])
+    done = b.run()
+    assert calls == [(4, 4)] * 3                 # 10 requests → 3 groups
+    assert sorted(r.rid for r in done) == list(range(10))
+    assert all(r.rid >= 0 for r in b.completed)
+    st = b.latency_stats()
+    assert st["count"] == 10
+    assert st["p95_ms"] >= st["p50_ms"] >= 0.0
+    for r in done:
+        assert r.finished_s is not None and r.latency_s > 0
+
+
+def test_distance_batcher_pad_false_sends_short_tail():
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=4, pad=False)
+    b.submit_pairs([(i, i) for i in range(6)])
+    done = b.run()
+    assert calls == [(4, 4), (2, 2)]            # tail not padded
+    assert sorted(r.rid for r in done) == list(range(6))
+    assert b.latency_stats()["count"] == 6
+
+
+def test_distance_batcher_requeue_after_drain():
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=2)
+    b.submit(DistanceRequest(rid=0, s=1, t=1))
+    assert len(b.run()) == 1
+    b.submit(DistanceRequest(rid=1, s=2, t=2))
+    done = b.run()
+    assert sorted(r.rid for r in done) == [0, 1]
+    assert all(r.rid >= 0 for r in b.completed)
+
+
+def test_decoder_empty_queue_and_padding():
+    cfg = get_smoke_config("qwen3_4b").reduced(num_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dec = BatchedDecoder(cfg, params, batch_size=4, max_len=16)
+    assert dec.run() == []                       # empty queue is a no-op
+    dec.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
+    dec.submit(Request(rid=1, prompt=[3], max_new_tokens=3))
+    done = dec.run()                             # group of 2 + 2 dummies
+    assert sorted(r.rid for r in done) == [0, 1]
+    assert all(r.rid >= 0 for r in dec.completed)
+    for r in done:
+        assert len(r.tokens) == r.max_new_tokens
+        assert r.latency_s > 0

@@ -1,0 +1,124 @@
+"""Batched edge-query engine: parity of ``EdgeSystem.query_batched``
+against the scalar loop and brute-force search, across all three §4.2
+routing rules, the LB-certified rebuild window, and unreachable pairs."""
+import numpy as np
+import pytest
+
+from repro.core import (Partition, bfs_grow_partition,
+                        bidirectional_dijkstra, dijkstra, from_edges,
+                        grid_road_network, perturb_weights)
+from repro.edge import EdgeSystem
+
+
+@pytest.fixture(scope="module")
+def system():
+    g = grid_road_network(8, 8, seed=11)
+    part = bfs_grow_partition(g, 4, seed=0)
+    return g, part, EdgeSystem.deploy(g, part)
+
+
+def test_batched_matches_loop_exactly(system):
+    g, part, sys_ = system
+    rng = np.random.default_rng(0)
+    ss = rng.integers(0, g.num_vertices, size=2000)
+    ts = rng.integers(0, g.num_vertices, size=2000)
+    np.testing.assert_array_equal(sys_.query_loop(ss, ts),
+                                  sys_.query_batched(ss, ts))
+
+
+def test_batched_matches_brute_force_all_rules(system):
+    g, part, sys_ = system
+    rng = np.random.default_rng(1)
+    n = g.num_vertices
+    ss = rng.integers(0, n, size=200)
+    ts = rng.integers(0, n, size=200)
+    # submit half the queries from a rotated client district so rule 2
+    # (same district, another server's) fires alongside rules 1 and 3
+    client = (part.assignment[ss]
+              + rng.integers(0, 2, size=200)) % part.num_districts
+    got = sys_.query_batched(ss, ts, client_districts=client)
+    for i in range(200):
+        ref = bidirectional_dijkstra(g, int(ss[i]), int(ts[i]))
+        assert got[i] == pytest.approx(ref, rel=1e-5), (ss[i], ts[i])
+    assert sys_.stats["rule1"] > 0
+    assert sys_.stats["rule2"] > 0
+    assert sys_.stats["rule3"] > 0
+
+
+def test_batched_empty_and_single(system):
+    g, part, sys_ = system
+    empty = sys_.query_batched(np.array([], dtype=np.int64),
+                               np.array([], dtype=np.int64))
+    assert empty.shape == (0,)
+    one = sys_.query_batched(np.array([3]), np.array([3]))
+    assert one[0] == 0.0
+
+
+def test_rebuild_window_batched_certified_and_exact():
+    g = grid_road_network(8, 8, seed=13)
+    part = bfs_grow_partition(g, 4, seed=0)
+    sys_ = EdgeSystem.deploy(g, part)
+    rng = np.random.default_rng(2)
+    w2 = perturb_weights(g, rng, lo=0.8, hi=1.3)
+    # simulate mid-window: locals refreshed + center rebuilt, shortcuts
+    # NOT yet pushed → the batch must go through the Theorem-3 kernels
+    g2 = sys_.graph.with_weights(w2)
+    sys_.graph = g2
+    for srv in sys_.servers:
+        srv.refresh_local(g2, part)
+    sys_.center.rebuild(w2)
+    ss = rng.integers(0, g2.num_vertices, size=400)
+    ts = rng.integers(0, g2.num_vertices, size=400)
+    got = sys_.query_batched(ss, ts)
+    assert sys_.stats["lb_fallback_attempts"] > 0
+    assert sys_.stats["lb_certified"] > 0
+    for i in range(0, 400, 7):
+        ref = float(dijkstra(g2, int(ss[i]))[int(ts[i])])
+        assert got[i] == pytest.approx(ref, rel=1e-5), (ss[i], ts[i])
+    # the uncertified residue forced shortcut installs; once every server
+    # is fresh again the steady-state engine must agree with the loop
+    got2 = sys_.query_batched(ss, ts)
+    np.testing.assert_array_equal(got2, sys_.query_loop(ss, ts))
+
+
+def _two_component_graph():
+    """Two disjoint 4x4 unit grids: vertices 0..15 and 16..31."""
+    us, vs = [], []
+    for base in (0, 16):
+        for r in range(4):
+            for c in range(4):
+                v = base + r * 4 + c
+                if c + 1 < 4:
+                    us.append(v)
+                    vs.append(v + 1)
+                if r + 1 < 4:
+                    us.append(v)
+                    vs.append(v + 4)
+    w = np.ones(len(us), dtype=np.float32)
+    return from_edges(32, np.array(us), np.array(vs), w)
+
+
+def test_unreachable_pairs_stay_inf():
+    g = _two_component_graph()
+    # columns 0-1 → district 0, columns 2-3 → district 1, in BOTH
+    # components: every district spans two disconnected pieces
+    cols = np.arange(32) % 4
+    assignment = np.where(cols < 2, 0, 1).astype(np.int32)
+    sys_ = EdgeSystem.deploy(g, Partition(assignment, 2))
+    ss = np.array([0, 0, 2, 0, 2, 16])
+    ts = np.array([16, 19, 17, 5, 3, 31])
+    got = sys_.query_batched(ss, ts)
+    for i in range(len(ss)):
+        ref = bidirectional_dijkstra(g, int(ss[i]), int(ts[i]))
+        if np.isinf(ref):
+            assert np.isinf(got[i]), (ss[i], ts[i])
+        else:
+            assert got[i] == pytest.approx(ref, rel=1e-5), (ss[i], ts[i])
+    # same-district unreachable (rule 1) and cross-district unreachable
+    # (rule 3) both surfaced as +inf
+    assert np.isinf(got[0]) and np.isinf(got[1])
+    rng = np.random.default_rng(3)
+    rs = rng.integers(0, 32, size=300)
+    rt = rng.integers(0, 32, size=300)
+    np.testing.assert_array_equal(sys_.query_loop(rs, rt),
+                                  sys_.query_batched(rs, rt))
