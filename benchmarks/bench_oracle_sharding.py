@@ -1,20 +1,29 @@
-"""§Perf (paper technique): border-table placement on the device mesh.
+"""§Perf (paper technique): index placement on the device mesh.
 
-Hypothesis: replicating B (the computing center) costs n·q·4 bytes per
-device but answers rule-3 queries with zero collectives; row-sharding B
-over the edge axis cuts memory by the device count but every cross-
-district query must fetch two q-wide rows across shards. This experiment
-compiles both layouts on an 8-device host mesh and reports per-device
-index bytes + collective bytes per 4096-query batch from the optimized
-HLO — the crossover rule (replicate while n·q·4 « HBM) goes to DESIGN.md.
+Two experiments on virtual host meshes:
+
+1. Border-table placement — replicating B (the computing center) costs
+   n·q·4 bytes per device but answers rule-3 queries with zero
+   collectives; row-sharding B cuts memory by the device count but every
+   cross-district query fetches two q-wide rows across shards. Compiles
+   both layouts on an 8-device mesh and reports per-device index bytes +
+   collective bytes per 4096-query batch from the optimized HLO.
+
+2. ShardedBatchedEngine sweep — batch size × device count for the
+   serving engine that shards the combined district tables over the
+   ``edge`` axis (B replicated). Reports µs/query and the per-device
+   district-table footprint, which shrinks ≈ 1/E versus the replicated
+   engine. Each device count runs in its own subprocess because
+   XLA_FLAGS must be set before jax initializes.
 """
 from __future__ import annotations
 
-import os
-import subprocess
-import sys
+from .common import emit, engine_sweep_code, run_json_subprocess
 
-from .common import emit
+ENGINE_DEVICE_COUNTS = (1, 2, 4, 8)
+ENGINE_BATCH_SIZES = (256, 1024, 4096)
+ENGINE_SETUP = ("g = grid_road_network(24, 24, seed=3); "
+                "part = bfs_grow_partition(g, 8, seed=0)")
 
 CODE = r"""
 import os
@@ -72,23 +81,31 @@ print(json.dumps({"n": int(n), "q": int(q), **out}))
 
 
 def run() -> None:
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.pathsep.join(
-        ["src"] + env.get("PYTHONPATH", "").split(os.pathsep))
-    out = subprocess.run([sys.executable, "-c", CODE], env=env,
-                         capture_output=True, text=True, timeout=560,
-                         cwd=os.path.dirname(os.path.dirname(
-                             os.path.abspath(__file__))))
-    if out.returncode != 0:
-        raise RuntimeError(out.stderr[-1500:])
-    import json
-    line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
-    r = json.loads(line)
+    r = run_json_subprocess(CODE)
     for name in ("replicated", "row-sharded"):
         emit(f"oracle-sharding/{name}",
              r[name]["coll_mb"] * 1e3,  # KB collectives per 4k queries
              f"arg_mb_per_dev={r[name]['arg_mb']:.2f};n={r['n']};q={r['q']}"
              f";col2=coll_kb_per_4k_queries")
+    run_engine_sweep()
+
+
+def run_engine_sweep() -> None:
+    """ShardedBatchedEngine: batch × device-count sweep + memory scaling."""
+    for ndev in ENGINE_DEVICE_COUNTS:
+        r = run_json_subprocess(
+            engine_sweep_code(ENGINE_SETUP, ndev, ENGINE_BATCH_SIZES))
+        # district tables shrink 1/E (vs the replicated DISTRICT rows —
+        # exactly 1.0 at E=1); resident adds the replicated B copy and is
+        # compared against the full combined table
+        dfrac = r["per_device_table_bytes"] / r["replicated_district_bytes"]
+        rfrac = r["per_device_resident_bytes"] / r["replicated_table_bytes"]
+        for b, sec in r["sweep"].items():
+            emit(f"oracle-sharding/engine-E{ndev}-b{b}",
+                 sec / int(b) * 1e6,
+                 f"qps={int(b) / sec:,.0f}"
+                 f";table_bytes_per_dev={r['per_device_table_bytes']}"
+                 f";district_frac={dfrac:.3f};resident_frac={rfrac:.3f}")
 
 
 if __name__ == "__main__":

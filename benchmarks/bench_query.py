@@ -5,7 +5,11 @@ online bidirectional Dijkstra is the millisecond-level baseline family.
 Batched joins (the TPU serving layout) are reported separately — that's
 the number the edge deployment actually serves at: the second section
 sweeps ``EdgeSystem.query_batched`` (the single-dispatch combined-table
-engine) over batch sizes 64–4096 against the per-query Python loop.
+engine) over batch sizes 64–4096 against the per-query Python loop, and
+the third section re-runs the sweep through the mesh-sharded
+``ShardedBatchedEngine`` on 8 virtual host devices (subprocess, so the
+main process keeps its single-device backend), reporting the per-device
+district-table footprint next to the replicated engine's.
 """
 from __future__ import annotations
 
@@ -15,12 +19,16 @@ from repro.core import (DistanceOracle, bidirectional_dijkstra,
                         grid_partition, grid_road_network, pll)
 from repro.edge import EdgeSystem
 
-from .common import emit, timeit
+from .common import emit, engine_sweep_code, run_json_subprocess, timeit
 
 NUM_QUERIES = 10_000
 BIDIJ_QUERIES = 50
 ENGINE_BATCH_SIZES = (64, 256, 1024, 4096)
 ENGINE_LOOP_QUERIES = 1024
+SHARDED_DEVICES = 8
+SHARDED_BATCH_SIZES = (256, 1024, 4096)
+SHARDED_SETUP = ("g = grid_road_network(50, 50, seed=7); "
+                 "part = grid_partition(g, 50, 50, 3, 4)")
 
 
 def run() -> None:
@@ -53,6 +61,7 @@ def run() -> None:
          "online-search baseline")
 
     run_engine(g, part, rng)
+    run_sharded()
 
 
 def run_engine(g=None, part=None, rng=None) -> None:
@@ -81,6 +90,23 @@ def run_engine(g=None, part=None, rng=None) -> None:
         emit(f"engine/batched-{b}", sec / b * 1e6, f"qps={qps:,.0f}")
     emit("engine/speedup-vs-loop-1024", speedup_1024,
          "x faster per query at batch 1024")
+
+
+def run_sharded() -> None:
+    """Mesh-sharded engine sweep on 8 virtual host devices (subprocess:
+    XLA_FLAGS must be set before jax initializes). Answers are asserted
+    identical to the replicated engine before timing."""
+    r = run_json_subprocess(engine_sweep_code(
+        SHARDED_SETUP, SHARDED_DEVICES, SHARDED_BATCH_SIZES))
+    dfrac = r["per_device_table_bytes"] / r["replicated_district_bytes"]
+    rfrac = r["per_device_resident_bytes"] / r["replicated_table_bytes"]
+    for b, sec in r["sweep"].items():
+        emit(f"engine/sharded-{b}", sec / int(b) * 1e6,
+             f"qps={int(b) / sec:,.0f};devices={r['devices']}")
+    emit("engine/sharded-table-bytes-per-device",
+         r["per_device_table_bytes"],
+         f"replicated={r['replicated_table_bytes']}"
+         f";district_frac={dfrac:.3f};resident_frac={rfrac:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,76 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, and the subprocess
+runner + code template for multi-device sweeps (XLA_FLAGS must be set
+before jax initializes, so those re-enter in a fresh interpreter)."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
+
+
+def run_json_subprocess(code: str, timeout: int = 560) -> dict:
+    """Run a Python snippet in a fresh interpreter (PYTHONPATH=src, repo
+    root cwd) and parse the last JSON line it prints."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        ["src"] + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-1500:])
+    return json.loads([l for l in out.stdout.splitlines()
+                       if l.startswith("{")][-1])
+
+
+_ENGINE_SWEEP_TEMPLATE = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + "%(devices)d")
+import json, time
+import numpy as np
+from repro.core import (bfs_grow_partition, grid_partition,
+                        grid_road_network)
+from repro.edge import BatchedQueryEngine, EdgeSystem, ShardedBatchedEngine
+
+%(setup)s
+system = EdgeSystem.deploy(g, part)
+args = (system.center.border_labels.table,
+        [srv.augmented for srv in system.servers], part.assignment)
+sharded = ShardedBatchedEngine(*args)
+replicated = BatchedQueryEngine(*args)
+rng = np.random.default_rng(0)
+out = {"devices": sharded.num_devices,
+       "per_device_table_bytes": sharded.district_table_bytes_per_device(),
+       "per_device_resident_bytes": sharded.size_bytes(),
+       "replicated_district_bytes": replicated.data.district_bytes_per_device(),
+       "replicated_table_bytes": replicated.size_bytes(), "sweep": {}}
+for b in %(batches)r:
+    ss = rng.integers(0, g.num_vertices, size=b)
+    ts = rng.integers(0, g.num_vertices, size=b)
+    np.testing.assert_array_equal(sharded.query(ss, ts),
+                                  replicated.query(ss, ts))
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        sharded.query(ss, ts)
+        best = min(best, time.perf_counter() - t0)
+    out["sweep"][str(b)] = best
+print(json.dumps(out))
+"""
+
+
+def engine_sweep_code(setup: str, devices: int,
+                      batch_sizes: tuple[int, ...]) -> str:
+    """ShardedBatchedEngine sweep snippet: ``setup`` must define ``g``
+    and ``part``; answers are asserted identical to the replicated
+    engine before timing, and per-device table bytes are reported."""
+    return _ENGINE_SWEEP_TEMPLATE % {
+        "setup": setup, "devices": devices, "batches": batch_sizes}
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):

@@ -5,11 +5,11 @@ from .topology import LatencyModel, Topology
 from .center import ComputingCenter
 from .server import EdgeServer
 from .router import EdgeSystem
-from .engine import BatchedQueryEngine
+from .engine import BatchedQueryEngine, ShardedBatchedEngine
 from .simulator import (BatchPolicy, QueryEvent, SimResult, UpdateSchedule,
                         make_trace, simulate_centralized, simulate_edge)
-from .sharded_oracle import (ShardedOracleData, pack_for_mesh,
-                             prepare_queries, make_sharded_query_fn,
-                             sharded_query)
+from .sharded_oracle import (ShardedOracleData, default_edge_mesh,
+                             pack_for_mesh, pack_tables, prepare_queries,
+                             make_sharded_query_fn, sharded_query)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

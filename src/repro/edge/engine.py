@@ -32,9 +32,12 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.local_index import LocalIndex
 from ..kernels.label_join import ops as lj
+from .sharded_oracle import (default_edge_mesh, make_sharded_query_fn,
+                             pack_tables, prepare_queries)
 
 INF = np.float32(np.inf)
 
@@ -47,27 +50,31 @@ def _engine_fn(table, rs, rt, use_pallas: bool):
     return lj.join(table[rs], table[rt], use_pallas=use_pallas)
 
 
+def _pad_to_bucket(*cols: np.ndarray) -> list[np.ndarray]:
+    """Zero-pad row-id columns up to a multiple of PAD_Q so the jit only
+    ever sees a bounded set of shapes (padding lanes join row 0 against
+    itself — on device 0, for the sharded engine — and are sliced off)."""
+    qn = len(cols[0])
+    qp = lj._ceil_to(qn, lj.PAD_Q)
+    out = []
+    for c in cols:
+        p = np.zeros(qp, dtype=np.int64)
+        p[:qn] = c
+        out.append(p)
+    return out
+
+
 class BatchedQueryEngine:
     """Vectorized §4.2 serving over a fixed index version."""
 
     def __init__(self, btable: np.ndarray, locals_: list[LocalIndex],
                  assignment: np.ndarray, use_pallas: bool | None = None):
-        n = len(assignment)
-        m = len(locals_)
-        kmax = max(len(li.vertices) for li in locals_)
-        width = max(kmax, btable.shape[1], 1)
-        table = np.full((m * kmax + n, width), INF, dtype=np.float32)
-        local_pos = np.zeros(n, dtype=np.int64)
-        for i, li in enumerate(locals_):
-            k = len(li.vertices)
-            table[i * kmax:i * kmax + k, :k] = li.dense_table()
-            local_pos[li.vertices] = np.arange(k, dtype=np.int64)
-        table[m * kmax:, :btable.shape[1]] = btable
-        self.kmax = kmax
-        self.cross_base = m * kmax
-        self.assignment = assignment.astype(np.int64)
-        self.local_pos = local_pos
-        self._table = jnp.asarray(table)
+        # single-shard blocked packing == the combined replicated layout:
+        # district rows d·kmax + local(v), then B at rows m·kmax + v
+        self.data = pack_tables(btable, locals_, assignment, num_devices=1,
+                                combined=True)
+        self._table = jnp.asarray(self.data.combined_table)
+        self.data.release_host_tables()     # device copy is authoritative
         if use_pallas is None:          # Pallas kernel on accelerators,
             use_pallas = jax.default_backend() != "cpu"   # XLA ref on CPU
         self.use_pallas = use_pallas
@@ -78,26 +85,84 @@ class BatchedQueryEngine:
     def row_ids(self, ss: np.ndarray, ts: np.ndarray
                 ) -> tuple[np.ndarray, np.ndarray]:
         """Host-side batch transform: §4.2 routing collapsed into combined-
-        table row ids, one vectorized NumPy pass."""
-        cross = self.assignment[ss] != self.assignment[ts]
-        local_row_s = self.assignment[ss] * self.kmax + self.local_pos[ss]
-        local_row_t = self.assignment[ts] * self.kmax + self.local_pos[ts]
-        rs = np.where(cross, self.cross_base + ss, local_row_s)
-        rt = np.where(cross, self.cross_base + ts, local_row_t)
-        return rs, rt
+        table row ids, one vectorized NumPy pass (the one-shard case of
+        the mesh routing pass — every query is 'owned' by device 0)."""
+        q = prepare_queries(self.data, ss, ts)
+        return q["rs"], q["rt"]
 
     def query(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
-        """Answer a batch; padded to a multiple of PAD_Q so the jit only
-        ever sees a bounded set of shapes (padding lanes join row 0
-        against itself and are sliced off)."""
+        """Answer a batch (padded to a PAD_Q bucket, see _pad_to_bucket)."""
         ss = np.asarray(ss, dtype=np.int64)
         ts = np.asarray(ts, dtype=np.int64)
         qn = len(ss)
         if qn == 0:
             return np.zeros(0, dtype=np.float32)
-        qp = lj._ceil_to(qn, lj.PAD_Q)
-        rs = np.zeros(qp, dtype=np.int64)
-        rt = np.zeros(qp, dtype=np.int64)
-        rs[:qn], rt[:qn] = self.row_ids(ss, ts)
+        rs, rt = _pad_to_bucket(*self.row_ids(ss, ts))
         out = _engine_fn(self._table, rs, rt, use_pallas=self.use_pallas)
         return np.asarray(out)[:qn]
+
+    __call__ = query
+
+
+class ShardedBatchedEngine:
+    """Mesh-sharded §4.2 serving: the combined table split over the
+    ``edge`` axis instead of replicated.
+
+    Same contract as ``BatchedQueryEngine.query`` (bit-for-bit identical
+    answers) but each device holds only its blocked slice of the district
+    tables — ``ceil(m/E)`` districts, ~1/E of the replicated engine's
+    district footprint — plus the replicated border table B. The host
+    routing pass emits (owner, row) coordinates and one collective
+    dispatch (per-device ``label_join`` gather-join + ``pmin`` over the
+    axis) answers the whole mixed-rule batch. See
+    ``edge.sharded_oracle`` for the layout and device function.
+    """
+
+    def __init__(self, btable: np.ndarray, locals_: list[LocalIndex],
+                 assignment: np.ndarray, mesh: Mesh | None = None,
+                 axis: str = "edge", use_pallas: bool | None = None):
+        if mesh is None:
+            mesh = default_edge_mesh(axis=axis)
+        self.mesh = mesh
+        self.axis = axis
+        self.num_devices = mesh.shape[axis]
+        self.data = pack_tables(btable, locals_, assignment,
+                                self.num_devices)
+        if use_pallas is None:
+            use_pallas = jax.default_backend() != "cpu"
+        self.use_pallas = use_pallas
+        self._fn = make_sharded_query_fn(mesh, axis, use_pallas)
+        self._table = jax.device_put(self.data.district_table,
+                                     NamedSharding(mesh, P(axis)))
+        self._btable = jax.device_put(self.data.btable,
+                                      NamedSharding(mesh, P()))
+        # the full combined table must not stay resident on the host —
+        # per-engine footprint ~1/E is the point of sharding
+        self.data.release_host_tables()
+
+    def district_table_bytes_per_device(self) -> int:
+        return self.data.district_bytes_per_device()
+
+    def size_bytes(self) -> int:
+        """Per-device resident bytes (district block + replicated B)."""
+        return self.data.bytes_per_device()
+
+    def row_ids(self, ss: np.ndarray, ts: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host routing pass → (owner device, per-device s row, t row)."""
+        q = prepare_queries(self.data, ss, ts)
+        return q["owner"], q["rs"], q["rt"]
+
+    def query(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        """Answer a batch (padded to a PAD_Q bucket exactly like the
+        replicated engine, see _pad_to_bucket)."""
+        ss = np.asarray(ss, dtype=np.int64)
+        ts = np.asarray(ts, dtype=np.int64)
+        qn = len(ss)
+        if qn == 0:
+            return np.zeros(0, dtype=np.float32)
+        owner, rs, rt = _pad_to_bucket(*self.row_ids(ss, ts))
+        out = self._fn(self._table, self._btable, owner, rs, rt)
+        return np.asarray(out)[:qn]
+
+    __call__ = query

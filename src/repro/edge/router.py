@@ -28,8 +28,11 @@ class EdgeSystem:
     stats: dict = field(default_factory=lambda: {
         "rule1": 0, "rule2": 0, "rule3": 0, "lb_certified": 0,
         "lb_fallback_attempts": 0})
+    # engine selection: None = auto (sharded iff the backend exposes more
+    # than one device), True/False = force sharded/replicated
+    prefer_sharded: bool | None = None
     # steady-state serving engine, snapshot of one index version
-    _engine: "BatchedQueryEngine | None" = field(default=None, repr=False)
+    _engine: object | None = field(default=None, repr=False)
     _engine_key: tuple | None = field(default=None, repr=False)
 
     @classmethod
@@ -148,18 +151,32 @@ class EdgeSystem:
                     ss[rest], ts[rest], use_kernels=use_kernels)
         return out
 
-    def _current_engine(self) -> "BatchedQueryEngine | None":
+    def _current_engine(self):
         """Engine snapshot for the current index version, or None while
-        any district's shortcuts are stale (rebuild window)."""
+        any district's shortcuts are stale (rebuild window). Single-device
+        backends get the replicated ``BatchedQueryEngine``; multi-device
+        backends shard the district tables over the ``edge`` mesh axis
+        (``ShardedBatchedEngine``) so the table scales past one device's
+        memory. ``prefer_sharded`` overrides the auto choice."""
         if any(srv.augmented is None
                or srv.augmented_version != self.center.version
                for srv in self.servers):
             return None
+        import jax
+        num_devices = len(jax.devices())
+        sharded = (num_devices > 1 if self.prefer_sharded is None
+                   else self.prefer_sharded)
         key = (self.center.version,
-               tuple(srv.augmented_version for srv in self.servers))
+               tuple(srv.augmented_version for srv in self.servers),
+               sharded, num_devices)
         if self._engine is None or self._engine_key != key:
-            from .engine import BatchedQueryEngine
-            self._engine = BatchedQueryEngine(
+            from .engine import BatchedQueryEngine, ShardedBatchedEngine
+            cls = ShardedBatchedEngine if sharded else BatchedQueryEngine
+            # drop the stale engine's device buffers BEFORE building the
+            # replacement: holding both doubles peak device memory at
+            # every rebuild, exactly where sharded tables run near limits
+            self._engine = None
+            self._engine = cls(
                 self.center.border_labels.table,
                 [srv.augmented for srv in self.servers],
                 self.partition.assignment)

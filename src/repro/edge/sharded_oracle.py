@@ -1,25 +1,35 @@
 """Districts → devices: the edge deployment mapped onto a JAX mesh.
 
 Every device of the ``edge`` mesh axis plays the role of a group of edge
-servers: it owns ``ceil(m / E)`` districts' local indexes (padded to a
-common shape and sharded over the axis), while the border-label table B —
-the computing center — is replicated. A query batch is preprocessed on the
-host into (district, local-id) coordinates, then answered in one
-``shard_map`` call:
+servers: it owns a *blocked* slice of the combined hub-aligned district
+tables — ``dpd = ceil(m / E)`` districts per device, every district
+densified to the same ``(kmax, W)`` layout the replicated
+``BatchedQueryEngine`` uses — while the border-label table B (the
+computing center) is replicated. This is how a label store scales past a
+single device's memory: the district tables are partitioned, so the
+per-device footprint is ~1/E of the replicated engine's.
 
-  rule 1/2 — the owning device joins the query against its local sparse
-             labels (kernels/label_join semantics);
-  rule 3   — the device owning the source district joins the replicated B
-             rows (load-balanced center);
+A query batch is preprocessed on the host into (owner, row) coordinates:
 
-and a single ``pmin`` over the axis assembles the answer vector. This is
-the §4.2 routing with collectives instead of RPCs; the same function runs
-on 1 device (tests), 8 host devices (integration test), or a pod axis.
+  rule 1/2 — owner = the device holding district d (blocked assignment
+             ``d // dpd``), row = the query endpoint's slot in that
+             device's table block (``(d % dpd)·kmax + local``);
+  rule 3   — owner = the device holding the *source* district (load-
+             balanced center), row = the vertex's row in the replicated B
+             (offset past the device's district block);
+
+then ONE collective dispatch answers the whole mixed-rule batch: each
+device concatenates [its district block; B], runs the same dense
+``label_join`` gather-join the replicated engine runs, masks lanes it
+does not own to +inf, and a single ``pmin`` over the axis assembles the
+answer vector. This is the §4.2 routing with collectives instead of
+RPCs; the same function runs on 1 device (tests), 8 host devices
+(integration test + CI), or a pod axis.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -34,114 +44,178 @@ except AttributeError:                  # jax 0.4.x
 from ..core.labels import BorderLabels
 from ..core.local_index import LocalIndex
 from ..core.partition import Partition
+from ..kernels.label_join import ops as lj
 
 INF = np.float32(np.inf)
 
 
 @dataclass
 class ShardedOracleData:
-    """Host-packed arrays. Leading axis = m_pad districts (device-shardable)."""
-    local_hubs: np.ndarray    # (m_pad, kmax, L) int32, -1 pad
-    local_dists: np.ndarray   # (m_pad, kmax, L) f32, inf pad
-    btable: np.ndarray        # (n, q) f32 replicated
+    """Host-packed blocked layout. ``district_table`` rows are grouped by
+    district (``kmax`` rows each) so slicing the leading axis into E equal
+    chunks hands device d exactly districts ``d·dpd .. d·dpd+dpd-1``."""
+    district_table: np.ndarray | None  # (m_pad·kmax, W) f32 — shardable
+    btable: np.ndarray | None   # (n, W) f32 — replicated center table B
+    local_pos: np.ndarray       # (n,) int64: global id → local slot
+    assignment: np.ndarray      # (n,) int64: global id → district
+    kmax: int
     num_devices: int
     num_districts: int
+    # layout scalars snapshotted at pack time so the big host arrays can
+    # be released once the tables are device-resident (routing and the
+    # bytes accounting never touch the arrays again)
+    districts_per_device: int = field(init=False)
+    width: int = field(init=False)
+    num_vertices: int = field(init=False)
+    # single-allocation [districts; B] buffer (combined=True packing);
+    # district_table/btable are views into it — the replicated engine
+    # ships this to the device without a second host copy
+    combined_table: np.ndarray | None = None
+
+    def __post_init__(self):
+        self.districts_per_device = (self.district_table.shape[0]
+                                     // self.kmax // self.num_devices)
+        self.width = self.district_table.shape[1]
+        self.num_vertices = self.btable.shape[0]
 
     @property
-    def districts_per_device(self) -> int:
-        return self.local_hubs.shape[0] // self.num_devices
+    def cross_base(self) -> int:
+        """Per-device row offset of B inside [district block; B]."""
+        return self.districts_per_device * self.kmax
+
+    def release_host_tables(self) -> None:
+        """Drop the packed host copies (an engine calls this after
+        ``device_put`` — keeping them would hold the FULL combined table
+        in host RAM per engine instance, which is exactly the footprint
+        sharding exists to avoid)."""
+        self.district_table = None
+        self.btable = None
+        self.combined_table = None
+
+    def district_bytes_per_device(self) -> int:
+        return self.districts_per_device * self.kmax * self.width * 4
+
+    def bytes_per_device(self) -> int:
+        """Resident bytes per device: district block + replicated B."""
+        return (self.district_bytes_per_device()
+                + self.num_vertices * self.width * 4)
+
+
+def pack_tables(btable: np.ndarray, locals_: list[LocalIndex],
+                assignment: np.ndarray, num_devices: int, *,
+                combined: bool = False) -> ShardedOracleData:
+    """Blocked packing of the combined hub-aligned table: districts padded
+    to ``m_pad = dpd·E`` so the leading axis shards evenly, every district
+    table densified to (kmax, W) with the same inf padding the replicated
+    engine uses (padding lanes never win a min-plus join).
+
+    ``combined=True`` lays districts and B out in ONE allocation (the
+    replicated engine's device layout) so no second host copy is needed
+    to stack them; ``district_table``/``btable`` become views."""
+    n = len(assignment)
+    m = len(locals_)
+    dpd = -(-m // num_devices)
+    m_pad = dpd * num_devices
+    kmax = max(len(li.vertices) for li in locals_)
+    width = max(kmax, btable.shape[1], 1)
+    rows = m_pad * kmax
+    if combined:
+        buf = np.full((rows + n, width), INF, dtype=np.float32)
+        table, bt = buf[:rows], buf[rows:]
+    else:
+        buf = None
+        table = np.full((rows, width), INF, dtype=np.float32)
+        bt = np.full((n, width), INF, dtype=np.float32)
+    local_pos = np.zeros(n, dtype=np.int64)
+    for i, li in enumerate(locals_):
+        k = len(li.vertices)
+        table[i * kmax:i * kmax + k, :k] = li.dense_table()
+        local_pos[li.vertices] = np.arange(k, dtype=np.int64)
+    bt[:, :btable.shape[1]] = btable
+    return ShardedOracleData(table, bt, local_pos,
+                             assignment.astype(np.int64), kmax,
+                             num_devices, m, combined_table=buf)
 
 
 def pack_for_mesh(part: Partition, bl: BorderLabels,
                   locals_: list[LocalIndex], num_devices: int
                   ) -> ShardedOracleData:
-    m = part.num_districts
-    dpd = -(-m // num_devices)
-    m_pad = dpd * num_devices
-    kmax = max(len(li.vertices) for li in locals_)
-    lmax = max(li.labels.width for li in locals_)
-    hubs = -np.ones((m_pad, kmax, lmax), dtype=np.int32)
-    dists = np.full((m_pad, kmax, lmax), INF, dtype=np.float32)
-    for i, li in enumerate(locals_):
-        # device d owns global districts {d*dpd .. d*dpd+dpd-1} (blocked),
-        # so shard slot = i (blocked layout matches NamedSharding rows)
-        k = len(li.vertices)
-        w = li.labels.width
-        hubs[i, :k, :w] = li.labels.hubs
-        dists[i, :k, :w] = li.labels.dists
-    return ShardedOracleData(hubs, dists, bl.table.astype(np.float32),
-                             num_devices, m)
+    """Paper-facing wrapper: pack a built index for an E-device edge mesh."""
+    return pack_tables(bl.table.astype(np.float32), locals_,
+                       part.assignment, num_devices)
 
 
-def prepare_queries(part: Partition, locals_: list[LocalIndex],
-                    ss: np.ndarray, ts: np.ndarray) -> dict[str, np.ndarray]:
-    """Host-side client/edge-server preprocessing: route + localize ids."""
+def prepare_queries(data: ShardedOracleData, ss: np.ndarray,
+                    ts: np.ndarray) -> dict[str, np.ndarray]:
+    """Host-side client/edge-server routing pass: one vectorized NumPy
+    sweep emits each query's owning device and the two per-device row ids
+    its gather-join reads (§4.2 rules collapsed into coordinates)."""
     ss = np.asarray(ss, dtype=np.int64)
     ts = np.asarray(ts, dtype=np.int64)
-    ds = part.assignment[ss].astype(np.int32)
-    dt = part.assignment[ts].astype(np.int32)
-    cross = ds != dt
-    s_local = np.zeros(len(ss), dtype=np.int32)
-    t_local = np.zeros(len(ss), dtype=np.int32)
-    for i, li in enumerate(locals_):
-        sel = (~cross) & (ds == np.int32(i))
-        if sel.any():
-            s_local[sel] = li.local_of(ss[sel]).astype(np.int32)
-            t_local[sel] = li.local_of(ts[sel]).astype(np.int32)
-    return {"s_glob": ss.astype(np.int32), "t_glob": ts.astype(np.int32),
-            "district": ds, "cross": cross,
-            "s_local": s_local, "t_local": t_local}
+    ds = data.assignment[ss]
+    cross = ds != data.assignment[ts]
+    dpd = data.districts_per_device
+    slot_base = (ds % dpd) * data.kmax
+    rs = np.where(cross, data.cross_base + ss, slot_base + data.local_pos[ss])
+    rt = np.where(cross, data.cross_base + ts, slot_base + data.local_pos[ts])
+    return {"owner": ds // dpd, "rs": rs, "rt": rt}
 
 
-def _sparse_join(hs, ds_, ht, dt_):
-    eq = (hs[:, :, None] == ht[:, None, :]) & (hs[:, :, None] >= 0)
-    tot = ds_[:, :, None] + dt_[:, None, :]
-    return jnp.min(jnp.where(eq, tot, jnp.inf), axis=(1, 2))
+_FN_CACHE: dict = {}
 
 
-def make_sharded_query_fn(mesh: Mesh, axis: str = "edge"):
-    """Returns a jitted query(batch) function bound to ``mesh``."""
-    esize = mesh.shape[axis]
+def make_sharded_query_fn(mesh: Mesh, axis: str = "edge",
+                          use_pallas: bool = False):
+    """Jitted ``fn(district_block, btable, owner, rs, rt)`` bound to
+    ``mesh``: per-device dense gather-join over [block; B] + one pmin.
+    Cached per (mesh, axis, use_pallas) so engine rebuilds after traffic
+    updates reuse the compiled program."""
+    key = (mesh, axis, use_pallas)
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
 
-    def _device_fn(hubs, dists, btable, q):
-        # hubs/dists: (dpd, kmax, L) this device; everything else replicated
-        dev = jax.lax.axis_index(axis)
-        dpd = hubs.shape[0]
-        district = q["district"]
-        owner = district // dpd                       # blocked assignment
-        slot = district % dpd
-        mine_local = (~q["cross"]) & (owner == dev)
-        hs = hubs[slot, q["s_local"]]
-        ds_ = dists[slot, q["s_local"]]
-        ht = hubs[slot, q["t_local"]]
-        dt_ = dists[slot, q["t_local"]]
-        local_ans = _sparse_join(hs, ds_, ht, dt_)
-        ans = jnp.where(mine_local, local_ans, jnp.inf)
-        mine_cross = q["cross"] & (owner == dev)
-        rows_s = btable[q["s_glob"]]
-        rows_t = btable[q["t_glob"]]
-        cross_ans = jnp.min(rows_s + rows_t, axis=1)
-        ans = jnp.minimum(ans, jnp.where(mine_cross, cross_ans, jnp.inf))
-        return jax.lax.pmin(ans, axis)
+    def _device_fn(table, btable, owner, rs, rt):
+        return lj.join_sharded_gathered(table, btable, owner, rs, rt,
+                                        axis=axis, use_pallas=use_pallas)
 
     sharded = _shard_map(
         _device_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(), {k: P() for k in
-                  ("s_glob", "t_glob", "district", "cross",
-                   "s_local", "t_local")}),
+        in_specs=(P(axis), P(), P(), P(), P()),
         out_specs=P(),
     )
-    return jax.jit(sharded)
+    fn = jax.jit(sharded)
+    _FN_CACHE[key] = fn
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_cache(num_devices: int, axis: str) -> Mesh:
+    return Mesh(np.array(jax.devices()[:num_devices]).reshape(num_devices),
+                (axis,))
+
+
+def default_edge_mesh(num_devices: int | None = None,
+                      axis: str = "edge") -> Mesh:
+    """1-D ``edge`` mesh over the backend's devices (cached: the same Mesh
+    object comes back so jit caches keyed on it stay warm)."""
+    ndev = len(jax.devices()) if num_devices is None else num_devices
+    return _mesh_cache(ndev, axis)
 
 
 def sharded_query(data: ShardedOracleData, mesh: Mesh,
-                  queries: dict[str, np.ndarray],
-                  axis: str = "edge") -> np.ndarray:
-    fn = make_sharded_query_fn(mesh, axis)
+                  queries: dict[str, np.ndarray], axis: str = "edge",
+                  use_pallas: bool | None = None) -> np.ndarray:
+    """One-shot deployment entry point (tests / notebooks): place the
+    packed tables on the mesh and answer one prepared batch. Serving hot
+    paths should hold a ``ShardedBatchedEngine`` instead, which keeps the
+    tables device-resident across batches."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() != "cpu"
+    fn = make_sharded_query_fn(mesh, axis, use_pallas)
     dev_sharding = NamedSharding(mesh, P(axis))
     rep = NamedSharding(mesh, P())
-    hubs = jax.device_put(data.local_hubs, dev_sharding)
-    dists = jax.device_put(data.local_dists, dev_sharding)
+    table = jax.device_put(data.district_table, dev_sharding)
     btable = jax.device_put(data.btable, rep)
-    q = {k: jax.device_put(jnp.asarray(v), rep) for k, v in queries.items()}
-    return np.asarray(fn(hubs, dists, btable, q))
+    q = {k: jax.device_put(jnp.asarray(queries[k]), rep)
+         for k in ("owner", "rs", "rt")}
+    return np.asarray(fn(table, btable, q["owner"], q["rs"], q["rt"]))

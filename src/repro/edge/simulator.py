@@ -49,6 +49,9 @@ class SimResult:
 
     @classmethod
     def from_latencies(cls, lat: np.ndarray, lb_frac=0.0, waited=0.0):
+        if len(lat) == 0:       # empty trace: zeros, not NaN + warnings
+            return cls(np.asarray(lat, dtype=np.float64), 0.0, 0.0, 0.0,
+                       0.0, lb_frac, waited)
         return cls(lat, float(lat.mean()), float(np.percentile(lat, 50)),
                    float(np.percentile(lat, 95)),
                    float(np.percentile(lat, 99)), lb_frac, waited)
@@ -106,6 +109,7 @@ class _BatchedServer:
         self.policy = policy
         self.busy_until = 0.0
         self.pending: list[tuple[int, float]] = []   # (query idx, ready_ms)
+        self._min_ready = np.inf        # running min over pending ready_ms
 
     def _flush(self, close_ms: float, departures: np.ndarray) -> None:
         if not self.pending:
@@ -120,22 +124,30 @@ class _BatchedServer:
             departures[qi] = done
         self.busy_until = done
         self.pending.clear()
+        self._min_ready = np.inf
+
+    def _window_close_ms(self) -> float:
+        # the window is anchored on the oldest *ready* time, not on the
+        # submission order: a rebuild-window wait (max(arrive,
+        # global_ready)) can push an earlier query's ready time past
+        # later arrivals, so pending[0] need not hold the minimum
+        return self._min_ready + self.policy.window_ms
 
     def submit(self, qi: int, ready_ms: float,
                departures: np.ndarray) -> None:
         # close an expired window before admitting the new arrival
-        if self.pending and \
-                ready_ms >= self.pending[0][1] + self.policy.window_ms:
-            self._flush(self.pending[0][1] + self.policy.window_ms,
-                        departures)
+        if self.pending:
+            close = self._window_close_ms()
+            if ready_ms >= close:
+                self._flush(close, departures)
         self.pending.append((qi, ready_ms))
+        self._min_ready = min(self._min_ready, ready_ms)
         if len(self.pending) >= self.policy.batch_size:
             self._flush(ready_ms, departures)
 
     def finish(self, departures: np.ndarray) -> None:
         if self.pending:
-            self._flush(self.pending[0][1] + self.policy.window_ms,
-                        departures)
+            self._flush(self._window_close_ms(), departures)
 
 
 @dataclass

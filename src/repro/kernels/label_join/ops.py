@@ -85,6 +85,33 @@ def join_sparse_gathered(hubs: np.ndarray, dists: np.ndarray,
     return np.asarray(out)[:qn].astype(np.float32)
 
 
+def join_sharded_gathered(block: jnp.ndarray, btable: jnp.ndarray,
+                          owner: jnp.ndarray, rs: jnp.ndarray,
+                          rt: jnp.ndarray, *, axis: str,
+                          use_pallas: bool = True) -> jnp.ndarray:
+    """Per-device half of the mesh-sharded serving join; runs INSIDE a
+    ``shard_map`` over ``axis``. ``block`` is this device's slice of the
+    district tables, ``btable`` the replicated border table. Row ids
+    ``rs``/``rt`` below ``block.shape[0]`` gather from the block, the
+    rest from B (offset past the block); the dense join runs on every
+    device, lanes whose ``owner`` isn't this device are masked to +inf,
+    and a ``pmin`` over the axis assembles the answer vector."""
+    dev = jax.lax.axis_index(axis)
+    cross_base = block.shape[0]
+
+    def gather(rows):
+        # two gathers + a select keeps both tables device-resident (no
+        # per-dispatch [block; B] concat, which would cost table-sized
+        # memory traffic per call)
+        local = rows < cross_base
+        dist = block[jnp.where(local, rows, 0)]
+        bord = btable[jnp.where(local, 0, rows - cross_base)]
+        return jnp.where(local[:, None], dist, bord)
+
+    ans = join(gather(rs), gather(rt), use_pallas=use_pallas)
+    return jax.lax.pmin(jnp.where(owner == dev, ans, jnp.inf), axis)
+
+
 def bound_gathered(border_dist: np.ndarray, ss: np.ndarray,
                    ts: np.ndarray, *, use_pallas: bool = True) -> np.ndarray:
     """Theorem-3 serving certificate: LB[i] = min_b bd[ss[i]] + min_b'

@@ -14,6 +14,7 @@ full device utilization when request budgets are similar.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -49,7 +50,7 @@ class BatchedDecoder:
         self.max_len = max_len
         self._step = jax.jit(
             lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
         self.completed: list[Request] = []
 
     def submit(self, req: Request) -> None:
@@ -86,15 +87,15 @@ class BatchedDecoder:
         now = time.perf_counter()
         for r in group:
             r.finished_s = now
-            self.completed.append(r)
+            if r.rid >= 0:          # padding never reaches ``completed``
+                self.completed.append(r)
 
     def run(self) -> list[Request]:
         """Drain the queue in fixed-size groups."""
         while self.queue:
-            group = [self.queue.pop(0)
+            group = [self.queue.popleft()
                      for _ in range(min(self.batch_size, len(self.queue)))]
             while len(group) < self.batch_size:   # pad with dummies
                 group.append(Request(rid=-1, prompt=[0], max_new_tokens=1))
-            self._run_group([r for r in group])
-            self.completed = [r for r in self.completed if r.rid >= 0]
+            self._run_group(group)
         return self.completed

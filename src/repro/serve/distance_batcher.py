@@ -16,6 +16,7 @@ distance batch completes in a single engine call.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
@@ -39,11 +40,18 @@ class DistanceRequest:
 class DistanceBatcher:
     """Drains queued distance requests through a batched engine.
 
+    ``engine`` is either a callable ``(ss, ts) -> distances`` (e.g.
+    ``EdgeSystem.query_batched``) or an engine object exposing
+    ``query_batched`` / ``query`` with that signature — so a
+    ``BatchedQueryEngine``, ``ShardedBatchedEngine``, or whole
+    ``EdgeSystem`` plugs in directly.
+
     ``pad=True`` (default) guarantees the engine always sees exactly
     ``batch_size`` pairs by filling short tail groups with rid=-1
     dummies. Note the dummies are real (0, 0) queries from the engine's
     point of view — engine-side counters (e.g. EdgeSystem.stats) include
-    them. Engines that already pad internally to bounded shapes (like
+    them — but they never enter ``completed`` or the latency statistics.
+    Engines that already pad internally to bounded shapes (like
     ``EdgeSystem.query_batched``) can run with ``pad=False``."""
 
     def __init__(self, engine: Callable[[np.ndarray, np.ndarray],
@@ -51,10 +59,13 @@ class DistanceBatcher:
                  batch_size: int = 256, pad: bool = True):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if not callable(engine):
+            engine = getattr(engine, "query_batched", None) \
+                or getattr(engine, "query")
         self.engine = engine
         self.batch_size = batch_size
         self.pad = pad
-        self.queue: list[DistanceRequest] = []
+        self.queue: deque[DistanceRequest] = deque()
         self.completed: list[DistanceRequest] = []
 
     def submit(self, req: DistanceRequest) -> None:
@@ -74,25 +85,25 @@ class DistanceBatcher:
         for i, r in enumerate(group):
             r.distance = float(dist[i])
             r.finished_s = now
-            self.completed.append(r)
+            if r.rid >= 0:          # padding never reaches ``completed``
+                self.completed.append(r)
 
     def run(self) -> list[DistanceRequest]:
         """Drain the queue in fixed-size groups (short tails padded with
         rid=-1 dummies → static engine shapes); returns completed real
         requests, padding discarded."""
         while self.queue:
-            group = [self.queue.pop(0)
+            group = [self.queue.popleft()
                      for _ in range(min(self.batch_size, len(self.queue)))]
             while self.pad and len(group) < self.batch_size:
                 group.append(DistanceRequest(rid=-1, s=0, t=0))
             self._run_group(group)
-        self.completed = [r for r in self.completed if r.rid >= 0]
         return self.completed
 
     def latency_stats(self) -> dict[str, float]:
         """Latency percentiles (ms) over completed real requests."""
-        lat = np.array([r.latency_s for r in self.completed
-                        if r.rid >= 0], dtype=np.float64) * 1e3
+        lat = np.array([r.latency_s for r in self.completed],
+                       dtype=np.float64) * 1e3
         if len(lat) == 0:
             return {"count": 0, "mean_ms": 0.0, "p50_ms": 0.0,
                     "p95_ms": 0.0, "p99_ms": 0.0}

@@ -1,6 +1,8 @@
 """DistanceBatcher / BatchedDecoder edge cases: empty queue, groups
 smaller than batch_size, and rid=-1 padding never leaking into completed
 requests or latency statistics."""
+from collections import deque
+
 import jax
 import numpy as np
 
@@ -59,6 +61,49 @@ def test_distance_batcher_pad_false_sends_short_tail():
     assert calls == [(4, 4), (2, 2)]            # tail not padded
     assert sorted(r.rid for r in done) == list(range(6))
     assert b.latency_stats()["count"] == 6
+
+
+def test_distance_batcher_padding_invisible_mid_run():
+    """latency_stats / completed observed from inside an engine call
+    (i.e. mid-run) must never see rid=-1 padding dummies."""
+    b = DistanceBatcher(lambda ss, ts: None, batch_size=4)
+    mid = []
+
+    def engine(ss, ts):
+        mid.append((b.latency_stats()["count"],
+                    [r.rid for r in b.completed]))
+        return np.zeros(len(ss), dtype=np.float32)
+
+    b.engine = engine
+    b.submit_pairs([(i, i) for i in range(6)])   # groups: 4 real, 2+2 pad
+    b.run()
+    assert mid == [(0, []), (4, [0, 1, 2, 3])]
+    assert [r.rid for r in b.completed] == list(range(6))
+
+
+def test_distance_batcher_engine_object_plug_in():
+    """Engine objects exposing .query / .query_batched plug in directly."""
+    class _Eng:
+        def query(self, ss, ts):
+            return (ss + ts).astype(np.float32)
+
+    b = DistanceBatcher(_Eng(), batch_size=2, pad=False)
+    b.submit_pairs([(1, 2), (3, 4)])
+    assert [r.distance for r in b.run()] == [3.0, 7.0]
+
+
+def test_distance_batcher_drain_is_linear():
+    """The queue drains via deque.popleft — O(n) overall, and a large
+    drain leaves the queue empty with all requests completed in order."""
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=64, pad=False)
+    # the O(n) guarantee comes from deque.popleft — a plain list would
+    # pass the behavioral asserts below while reintroducing O(n²) shifts
+    assert isinstance(b.queue, deque)
+    b.submit_pairs([(i % 7, i % 5) for i in range(5000)])
+    done = b.run()
+    assert len(done) == 5000 and len(b.queue) == 0
+    assert [r.rid for r in done] == list(range(5000))
 
 
 def test_distance_batcher_requeue_after_drain():

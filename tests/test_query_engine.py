@@ -81,6 +81,44 @@ def test_rebuild_window_batched_certified_and_exact():
     np.testing.assert_array_equal(got2, sys_.query_loop(ss, ts))
 
 
+def test_engine_parity_mixed_rules_self_pairs_and_clients(system):
+    """query_batched (engine path) == query_loop bit-for-bit on a mixed
+    rule-1/2/3 batch including s == t pairs and explicit client
+    districts (client only affects rule counting, never the answer)."""
+    g, part, sys_ = system
+    rng = np.random.default_rng(5)
+    n = g.num_vertices
+    ss = rng.integers(0, n, size=1024)
+    ts = rng.integers(0, n, size=1024)
+    ss[::13] = ts[::13]                       # s == t lanes
+    client = (part.assignment[ss]
+              + rng.integers(0, 2, size=1024)) % part.num_districts
+    loop = sys_.query_loop(ss, ts)
+    np.testing.assert_array_equal(
+        sys_.query_batched(ss, ts, client_districts=client), loop)
+    np.testing.assert_array_equal(sys_.query_batched(ss, ts), loop)
+    assert (loop[::13] == 0.0).all()
+
+
+def test_engine_and_scalar_paths_count_rules_identically():
+    g = grid_road_network(8, 8, seed=11)
+    part = bfs_grow_partition(g, 4, seed=0)
+    rng = np.random.default_rng(6)
+    ss = rng.integers(0, g.num_vertices, size=300)
+    ts = rng.integers(0, g.num_vertices, size=300)
+    client = (part.assignment[ss]
+              + rng.integers(0, 2, size=300)) % part.num_districts
+    sys_scalar = EdgeSystem.deploy(g, part)
+    for s, t, c in zip(ss, ts, client):
+        sys_scalar.query(int(s), int(t), client_district=int(c))
+    sys_engine = EdgeSystem.deploy(g, part)
+    sys_engine.query_batched(ss, ts, client_districts=client)
+    assert sys_engine._current_engine() is not None   # engine path taken
+    for k in ("rule1", "rule2", "rule3"):
+        assert sys_engine.stats[k] == sys_scalar.stats[k], k
+    assert sys_engine.stats["rule2"] > 0
+
+
 def _two_component_graph():
     """Two disjoint 4x4 unit grids: vertices 0..15 and 16..31."""
     us, vs = [], []

@@ -1,8 +1,11 @@
-"""Sharded (districts→devices) oracle == single-process oracle.
+"""Sharded (districts→devices) serving == single-process reference.
 
-The 1-device case runs in-process; the 8-device case re-executes this file
-in a subprocess with XLA_FLAGS so the main test session keeps seeing a
-single CPU device (the dry-run is the only other multi-device consumer).
+The 1-device cases run in-process; the 8-device case re-executes this
+file's builders in a subprocess with XLA_FLAGS so the main test session
+keeps seeing a single CPU device. The 8-device job asserts the full
+acceptance contract: ShardedBatchedEngine == replicated
+BatchedQueryEngine == query_loop bit-for-bit on mixed-rule batches, and
+the per-device district-table footprint ≤ 1/4 of the replicated table's.
 """
 import os
 import subprocess
@@ -14,10 +17,10 @@ import pytest
 
 def _build_case():
     import jax
-    from jax.sharding import Mesh
     from repro.core import (DistanceOracle, bfs_grow_partition,
                             grid_road_network)
-    from repro.edge import pack_for_mesh, prepare_queries, sharded_query
+    from repro.edge import (default_edge_mesh, pack_for_mesh,
+                            prepare_queries, sharded_query)
 
     g = grid_road_network(8, 8, seed=31)
     part = bfs_grow_partition(g, 4, seed=0)
@@ -25,14 +28,43 @@ def _build_case():
     ndev = len(jax.devices())
     data = pack_for_mesh(part, oracle.border_labels, oracle.local_indexes,
                          ndev)
-    mesh = Mesh(np.array(jax.devices()).reshape(ndev), ("edge",))
+    mesh = default_edge_mesh(ndev)
     rng = np.random.default_rng(7)
     ss = rng.integers(0, g.num_vertices, size=200)
     ts = rng.integers(0, g.num_vertices, size=200)
-    queries = prepare_queries(part, oracle.local_indexes, ss, ts)
+    queries = prepare_queries(data, ss, ts)
     got = sharded_query(data, mesh, queries)
     ref = oracle.query_many(ss, ts)
     return got, ref
+
+
+def _engine_case():
+    """ShardedBatchedEngine vs replicated engine vs scalar loop on a
+    mixed rule-1/2/3 batch with s == t pairs. Returns footprints too."""
+    from repro.core import bfs_grow_partition, grid_road_network
+    from repro.edge import (BatchedQueryEngine, EdgeSystem,
+                            ShardedBatchedEngine)
+
+    g = grid_road_network(10, 10, seed=5)
+    part = bfs_grow_partition(g, 8, seed=1)
+    system = EdgeSystem.deploy(g, part)
+    rng = np.random.default_rng(3)
+    ss = rng.integers(0, g.num_vertices, size=600)
+    ts = rng.integers(0, g.num_vertices, size=600)
+    ss[::17] = ts[::17]                       # s == t lanes
+    args = (system.center.border_labels.table,
+            [srv.augmented for srv in system.servers],
+            part.assignment)
+    replicated = BatchedQueryEngine(*args)
+    sharded = ShardedBatchedEngine(*args)
+    return {"rep": replicated.query(ss, ts),
+            "shard": sharded.query(ss, ts),
+            "loop": system.query_loop(ss, ts),
+            "auto": system.query_batched(ss, ts),
+            "auto_cls": type(system._current_engine()).__name__,
+            "per_dev_bytes": sharded.district_table_bytes_per_device(),
+            "rep_bytes": replicated.size_bytes(),
+            "ndev": sharded.num_devices}
 
 
 def test_sharded_oracle_single_device_matches():
@@ -40,24 +72,57 @@ def test_sharded_oracle_single_device_matches():
     np.testing.assert_allclose(got, ref, rtol=1e-5)
 
 
-@pytest.mark.slow
-def test_sharded_oracle_eight_devices_matches():
+def test_sharded_engine_in_process_matches():
+    """Runs on however many devices the session exposes (1 in plain
+    tier-1, 8 in the mesh CI job); the router must auto-pick the engine
+    that matches the backend and answers must agree either way."""
+    import jax
+    r = _engine_case()
+    np.testing.assert_array_equal(r["rep"], r["shard"])
+    np.testing.assert_array_equal(r["shard"], r["loop"])
+    expected = ("ShardedBatchedEngine" if len(jax.devices()) > 1
+                else "BatchedQueryEngine")
+    assert r["auto_cls"] == expected
+    np.testing.assert_array_equal(r["auto"], r["loop"])
+
+
+def _run_under_8_devices(code: str) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + " --xla_force_host_platform_device_count=8")
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src")]
         + env.get("PYTHONPATH", "").split(os.pathsep))
-    code = (
-        "import numpy as np, jax; assert len(jax.devices()) == 8;"
-        "import tests.test_sharded_oracle as m;"
-        "got, ref = m._build_case();"
-        "np.testing.assert_allclose(got, ref, rtol=1e-5);"
-        "print('OK8')"
-    )
     out = subprocess.run(
         [sys.executable, "-c", code], env=env, capture_output=True,
         text=True, timeout=500,
         cwd=os.path.join(os.path.dirname(__file__), ".."))
     assert out.returncode == 0, out.stderr[-2000:]
     assert "OK8" in out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_oracle_eight_devices_matches():
+    _run_under_8_devices(
+        "import numpy as np, jax; assert len(jax.devices()) == 8;"
+        "import tests.test_sharded_oracle as m;"
+        "got, ref = m._build_case();"
+        "np.testing.assert_allclose(got, ref, rtol=1e-5);"
+        "print('OK8')"
+    )
+
+
+@pytest.mark.slow
+def test_sharded_engine_eight_devices_matches_and_shrinks():
+    _run_under_8_devices(
+        "import numpy as np, jax; assert len(jax.devices()) == 8;"
+        "import tests.test_sharded_oracle as m;"
+        "r = m._engine_case();"
+        "assert r['ndev'] == 8;"
+        "np.testing.assert_array_equal(r['rep'], r['shard']);"
+        "np.testing.assert_array_equal(r['shard'], r['loop']);"
+        "assert r['auto_cls'] == 'ShardedBatchedEngine';"
+        "np.testing.assert_array_equal(r['auto'], r['loop']);"
+        "assert r['per_dev_bytes'] * 4 <= r['rep_bytes'];"
+        "print('OK8')"
+    )

@@ -2,11 +2,16 @@
 SimResult), the §5 invariant that the edge deployment's p95 stays below
 the centralized baseline under a rebuild-heavy UpdateSchedule, and the
 micro-batched service mode."""
+import warnings
+
 import numpy as np
+import pytest
 
 from repro.core import bfs_grow_partition, grid_road_network
-from repro.edge import (BatchPolicy, LatencyModel, Topology, UpdateSchedule,
-                        make_trace, simulate_centralized, simulate_edge)
+from repro.edge import (BatchPolicy, LatencyModel, SimResult, Topology,
+                        UpdateSchedule, make_trace, simulate_centralized,
+                        simulate_edge)
+from repro.edge.simulator import _BatchedServer
 
 
 def _heavy_schedule() -> UpdateSchedule:
@@ -62,6 +67,44 @@ def test_edge_p95_beats_centralized_under_rebuild_heavy_schedule():
                                  batch=BatchPolicy(batch_size=32,
                                                    window_ms=2.0))
     assert edge_batched.p95_ms <= central.p95_ms
+
+
+def test_simresult_empty_trace_is_zeroed_without_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # NaN-mean RuntimeWarning fails
+        res = SimResult.from_latencies(np.array([], dtype=np.float64))
+    assert res.latencies_ms.shape == (0,)
+    assert res.mean_ms == res.p50_ms == res.p95_ms == res.p99_ms == 0.0
+    assert res.row("empty")["mean_ms"] == 0.0
+    # end-to-end: an empty trace simulates cleanly in both deployments
+    topo = Topology(2, LatencyModel())
+    sched = _heavy_schedule()
+    assert simulate_centralized([], topo, sched).mean_ms == 0.0
+    assert simulate_edge([], topo, sched, np.zeros(4, dtype=np.int32),
+                         _cert, 2, batch=BatchPolicy()).mean_ms == 0.0
+
+
+def test_batched_window_anchors_on_min_ready():
+    """A rebuild-delayed first submission must not stretch the batching
+    window: expiry is anchored on min(ready_ms) of the pending batch."""
+    pol = BatchPolicy(batch_size=100, window_ms=2.0, overhead_ms=0.5,
+                      per_query_ms=0.1)
+    srv = _BatchedServer(pol)
+    dep = np.zeros(5, dtype=np.float64)
+    srv.submit(0, 100.0, dep)     # ready pushed late by a rebuild wait
+    srv.submit(1, 5.0, dep)
+    srv.submit(2, 6.0, dep)
+    # window anchored at min ready = 5.0 → closes at 7.0; before the fix
+    # the anchor was pending[0].ready = 100.0 and nothing would flush
+    srv.submit(3, 8.0, dep)
+    # the flushed batch {0,1,2} still waits for its slowest member (100.0)
+    done = 100.0 + 0.5 + 3 * 0.1
+    assert dep[0] == dep[1] == dep[2] == pytest.approx(done)
+    assert dep[3] == 0.0                      # pends in the next window
+    srv.finish(dep)
+    # next batch: window closes at 8+2=10, but the server is busy until
+    # the previous batch departs
+    assert dep[3] == pytest.approx(done + 0.5 + 0.1)
 
 
 def test_batched_service_respects_network_floor():
