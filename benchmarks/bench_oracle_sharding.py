@@ -11,17 +11,28 @@ Two experiments on virtual host meshes:
 
 2. ShardedBatchedEngine sweep — batch size × device count for the
    serving engine that shards the combined district tables over the
-   ``edge`` axis (B replicated). Reports µs/query and the per-device
-   district-table footprint, which shrinks ≈ 1/E versus the replicated
-   engine. Each device count runs in its own subprocess because
-   XLA_FLAGS must be set before jax initializes.
+   ``edge`` axis, in BOTH border-table placements: B replicated at its
+   natural width q (``engine-E{E}-b{b}`` rows) and B row-sharded too
+   (``engine-border-E{E}-b{b}`` rows). Reports µs/query and per-device
+   resident bytes: the district block shrinks ≈ 1/E, and the B-sharded
+   layout's resident fraction ≈ district_frac/E + (n/E)·q — strictly
+   below the replicated-B layout at E ≥ 2. Each device count runs in
+   its own subprocess because XLA_FLAGS must be set before jax
+   initializes.
+
+``--quick`` runs a reduced sweep (E ∈ {1, 2}, one batch size) — the CI
+docs job invokes it so the sweep can't silently rot.
 """
 from __future__ import annotations
+
+import argparse
 
 from .common import emit, engine_sweep_code, run_json_subprocess
 
 ENGINE_DEVICE_COUNTS = (1, 2, 4, 8)
 ENGINE_BATCH_SIZES = (256, 1024, 4096)
+QUICK_DEVICE_COUNTS = (1, 2)
+QUICK_BATCH_SIZES = (256,)
 ENGINE_SETUP = ("g = grid_road_network(24, 24, seed=3); "
                 "part = bfs_grow_partition(g, 8, seed=0)")
 
@@ -80,33 +91,53 @@ print(json.dumps({"n": int(n), "q": int(q), **out}))
 """
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
     r = run_json_subprocess(CODE)
     for name in ("replicated", "row-sharded"):
         emit(f"oracle-sharding/{name}",
              r[name]["coll_mb"] * 1e3,  # KB collectives per 4k queries
              f"arg_mb_per_dev={r[name]['arg_mb']:.2f};n={r['n']};q={r['q']}"
              f";col2=coll_kb_per_4k_queries")
-    run_engine_sweep()
+    run_engine_sweep(quick=quick)
 
 
-def run_engine_sweep() -> None:
-    """ShardedBatchedEngine: batch × device-count sweep + memory scaling."""
-    for ndev in ENGINE_DEVICE_COUNTS:
+def run_engine_sweep(quick: bool = False) -> None:
+    """ShardedBatchedEngine: batch × device-count sweep + memory scaling
+    for both border-table placements (B replicated / B row-sharded)."""
+    device_counts = QUICK_DEVICE_COUNTS if quick else ENGINE_DEVICE_COUNTS
+    batches = QUICK_BATCH_SIZES if quick else ENGINE_BATCH_SIZES
+    for ndev in device_counts:
         r = run_json_subprocess(
-            engine_sweep_code(ENGINE_SETUP, ndev, ENGINE_BATCH_SIZES))
+            engine_sweep_code(ENGINE_SETUP, ndev, batches))
         # district tables shrink 1/E (vs the replicated DISTRICT rows —
-        # exactly 1.0 at E=1); resident adds the replicated B copy and is
-        # compared against the full combined table
+        # exactly 1.0 at E=1); resident adds each layout's share of B and
+        # is compared against the full combined replicated table
         dfrac = r["per_device_table_bytes"] / r["replicated_district_bytes"]
         rfrac = r["per_device_resident_bytes"] / r["replicated_table_bytes"]
+        bfrac = r["border_resident_bytes"] / r["replicated_table_bytes"]
+        if ndev >= 2 and r["q"]:
+            # acceptance: fully-sharded resident strictly below the
+            # replicated-B sharded layout once there is more than 1 device
+            assert r["border_resident_bytes"] < r["per_device_resident_bytes"]
         for b, sec in r["sweep"].items():
             emit(f"oracle-sharding/engine-E{ndev}-b{b}",
                  sec / int(b) * 1e6,
                  f"qps={int(b) / sec:,.0f}"
                  f";table_bytes_per_dev={r['per_device_table_bytes']}"
                  f";district_frac={dfrac:.3f};resident_frac={rfrac:.3f}")
+        for b, sec in r["sweep_border"].items():
+            emit(f"oracle-sharding/engine-border-E{ndev}-b{b}",
+                 sec / int(b) * 1e6,
+                 f"qps={int(b) / sec:,.0f}"
+                 f";border_bytes_per_dev={r['border_table_bytes_per_device']}"
+                 f";district_frac={dfrac:.3f}"
+                 f";border_resident_frac={bfrac:.3f}"
+                 f";n={r['n']};q={r['q']}")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep for CI smoke (E in {1,2}, one "
+                         "batch size)")
+    run(quick=ap.parse_args().quick)

@@ -94,19 +94,29 @@ def run_engine(g=None, part=None, rng=None) -> None:
 
 def run_sharded() -> None:
     """Mesh-sharded engine sweep on 8 virtual host devices (subprocess:
-    XLA_FLAGS must be set before jax initializes). Answers are asserted
-    identical to the replicated engine before timing."""
+    XLA_FLAGS must be set before jax initializes), in both border-table
+    placements. Answers are asserted identical to the replicated engine
+    before timing."""
     r = run_json_subprocess(engine_sweep_code(
         SHARDED_SETUP, SHARDED_DEVICES, SHARDED_BATCH_SIZES))
     dfrac = r["per_device_table_bytes"] / r["replicated_district_bytes"]
     rfrac = r["per_device_resident_bytes"] / r["replicated_table_bytes"]
+    bfrac = r["border_resident_bytes"] / r["replicated_table_bytes"]
     for b, sec in r["sweep"].items():
         emit(f"engine/sharded-{b}", sec / int(b) * 1e6,
+             f"qps={int(b) / sec:,.0f};devices={r['devices']}")
+    for b, sec in r["sweep_border"].items():
+        emit(f"engine/border-sharded-{b}", sec / int(b) * 1e6,
              f"qps={int(b) / sec:,.0f};devices={r['devices']}")
     emit("engine/sharded-table-bytes-per-device",
          r["per_device_table_bytes"],
          f"replicated={r['replicated_table_bytes']}"
          f";district_frac={dfrac:.3f};resident_frac={rfrac:.3f}")
+    emit("engine/border-sharded-resident-bytes-per-device",
+         r["border_resident_bytes"],
+         f"replicated={r['replicated_table_bytes']}"
+         f";border_bytes_per_dev={r['border_table_bytes_per_device']}"
+         f";border_resident_frac={bfrac:.3f};n={r['n']};q={r['q']}")
 
 
 if __name__ == "__main__":

@@ -42,33 +42,42 @@ system = EdgeSystem.deploy(g, part)
 args = (system.center.border_labels.table,
         [srv.augmented for srv in system.servers], part.assignment)
 sharded = ShardedBatchedEngine(*args)
+border = ShardedBatchedEngine(*args, shard_border=True)
 replicated = BatchedQueryEngine(*args)
 rng = np.random.default_rng(0)
 out = {"devices": sharded.num_devices,
+       "n": int(g.num_vertices),
+       "q": int(system.center.border_labels.num_borders),
        "per_device_table_bytes": sharded.district_table_bytes_per_device(),
        "per_device_resident_bytes": sharded.size_bytes(),
+       "border_resident_bytes": border.size_bytes(),
+       "border_table_bytes_per_device": border.border_table_bytes_per_device(),
        "replicated_district_bytes": replicated.data.district_bytes_per_device(),
-       "replicated_table_bytes": replicated.size_bytes(), "sweep": {}}
+       "replicated_table_bytes": replicated.size_bytes(),
+       "sweep": {}, "sweep_border": {}}
 for b in %(batches)r:
     ss = rng.integers(0, g.num_vertices, size=b)
     ts = rng.integers(0, g.num_vertices, size=b)
-    np.testing.assert_array_equal(sharded.query(ss, ts),
-                                  replicated.query(ss, ts))
-    best = float("inf")
-    for _ in range(5):
-        t0 = time.perf_counter()
-        sharded.query(ss, ts)
-        best = min(best, time.perf_counter() - t0)
-    out["sweep"][str(b)] = best
+    ref = replicated.query(ss, ts)
+    np.testing.assert_array_equal(sharded.query(ss, ts), ref)
+    np.testing.assert_array_equal(border.query(ss, ts), ref)
+    for eng, key in ((sharded, "sweep"), (border, "sweep_border")):
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            eng.query(ss, ts)
+            best = min(best, time.perf_counter() - t0)
+        out[key][str(b)] = best
 print(json.dumps(out))
 """
 
 
 def engine_sweep_code(setup: str, devices: int,
                       batch_sizes: tuple[int, ...]) -> str:
-    """ShardedBatchedEngine sweep snippet: ``setup`` must define ``g``
-    and ``part``; answers are asserted identical to the replicated
-    engine before timing, and per-device table bytes are reported."""
+    """ShardedBatchedEngine sweep snippet (replicated-B AND row-sharded-B
+    layouts): ``setup`` must define ``g`` and ``part``; answers are
+    asserted identical to the replicated engine before timing, and
+    per-device resident bytes are reported for every layout."""
     return _ENGINE_SWEEP_TEMPLATE % {
         "setup": setup, "devices": devices, "batches": batch_sizes}
 

@@ -1,12 +1,18 @@
 """End-to-end edge-serving driver (the paper's deployment, §4–§5).
 
-Deploys a computing center + edge servers over a road network, then
-drives an hour of simulated traffic: batched client queries arriving
-continuously while the road weights update every epoch. Every answer is
-served exactly (Theorems 1–3); the latency table compares the edge
-deployment against the centralized baseline on measured rebuild costs.
+Deploys a computing center + edge servers over a road network, walks
+through the three serving-engine layouts (replicated, district-sharded,
+B-sharded — see README "Choosing an engine" and docs/ARCHITECTURE.md),
+then drives an hour of simulated traffic: batched client queries
+arriving continuously while the road weights update every epoch. Every
+answer is served exactly (Theorems 1–3); the latency table compares the
+edge deployment against the centralized baseline on measured rebuild
+costs.
 
     PYTHONPATH=src python examples/edge_serving.py [--minutes 10]
+
+Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 to watch
+the sharded layouts actually shrink the per-device footprint.
 """
 import argparse
 import time
@@ -48,6 +54,21 @@ def main() -> None:
     print(f"served 2k queries in {batched_ms:.1f} ms batched "
           f"(single-query loop would take ~{loop_ms:.0f} ms); "
           f"routing stats: {sys_.stats}")
+
+    # -- choosing an engine: the three layouts answer identically --------
+    import jax
+    print(f"\nengine layouts on {len(jax.devices())} device(s) "
+          f"(README 'Choosing an engine'):")
+    for label, prefer, border in (("replicated", False, None),
+                                  ("district-sharded", True, False),
+                                  ("B-sharded", True, True)):
+        sys_.prefer_sharded, sys_.shard_border = prefer, border
+        np.testing.assert_array_equal(sys_.query_batched(ss, ts), d0)
+        eng = sys_.current_engine()
+        print(f"  {label:18s} {type(eng).__name__:22s} "
+              f"resident {eng.size_bytes()/1e6:6.2f} MB/device")
+    sys_.prefer_sharded = sys_.shard_border = None   # back to auto-pick
+    sys_.query_batched(ss[:1], ts[:1])               # rebuild auto engine
 
     # the micro-batching front door: per-request latency accounting
     # pad=False: query_batched already pads internally, and dummy pairs

@@ -24,6 +24,16 @@ The engine is a snapshot of one index version: the router rebuilds it
 (cheap: one densify pass per district) whenever the center pushes new
 shortcuts, and falls back to the bucketed Theorem-3 path while any
 district's L_i⁺ is stale.
+
+Paper map: the row-id transform implements the §4.2 query rules (rule
+1/2 → district rows, rule 3 → border rows of B); the dense join is
+Definition 1 on the hub-aligned §5.1 layout; the rebuild-window fallback
+(in ``edge/router.py``) is the Theorem-3 Local-Bound certificate. Three
+engine layouts trade memory for collectives — replicated
+(``BatchedQueryEngine``), district-sharded, and fully-sharded
+(``ShardedBatchedEngine`` with ``shard_border=True``); see
+docs/ARCHITECTURE.md for the memory model and README "Choosing an
+engine" for how the router auto-picks.
 """
 from __future__ import annotations
 
@@ -111,31 +121,40 @@ class ShardedBatchedEngine:
     Same contract as ``BatchedQueryEngine.query`` (bit-for-bit identical
     answers) but each device holds only its blocked slice of the district
     tables — ``ceil(m/E)`` districts, ~1/E of the replicated engine's
-    district footprint — plus the replicated border table B. The host
-    routing pass emits (owner, row) coordinates and one collective
-    dispatch (per-device ``label_join`` gather-join + ``pmin`` over the
-    axis) answers the whole mixed-rule batch. See
+    district footprint — plus either the whole border table B at its
+    natural width q (default) or, with ``shard_border=True``, only a
+    ``ceil(n/E)`` row-slice of it, retiring the last replicated
+    structure in the serving path. The host routing pass emits
+    (owner, row) coordinates and one collective dispatch (per-device
+    ``label_join`` gather-join + ``pmin`` over the axis; the B-sharded
+    mode assembles the touched B rows with a ragged gather + ``pmin``
+    first) answers the whole mixed-rule batch. See
     ``edge.sharded_oracle`` for the layout and device function.
     """
 
     def __init__(self, btable: np.ndarray, locals_: list[LocalIndex],
                  assignment: np.ndarray, mesh: Mesh | None = None,
-                 axis: str = "edge", use_pallas: bool | None = None):
+                 axis: str = "edge", use_pallas: bool | None = None,
+                 shard_border: bool = False):
         if mesh is None:
             mesh = default_edge_mesh(axis=axis)
         self.mesh = mesh
         self.axis = axis
         self.num_devices = mesh.shape[axis]
+        self.shard_border = shard_border
         self.data = pack_tables(btable, locals_, assignment,
-                                self.num_devices)
+                                self.num_devices,
+                                shard_border=shard_border)
         if use_pallas is None:
             use_pallas = jax.default_backend() != "cpu"
         self.use_pallas = use_pallas
-        self._fn = make_sharded_query_fn(mesh, axis, use_pallas)
+        self._fn = make_sharded_query_fn(mesh, axis, use_pallas,
+                                         shard_border=shard_border)
         self._table = jax.device_put(self.data.district_table,
                                      NamedSharding(mesh, P(axis)))
+        bspec = P(self.axis) if shard_border else P()
         self._btable = jax.device_put(self.data.btable,
-                                      NamedSharding(mesh, P()))
+                                      NamedSharding(mesh, bspec))
         # the full combined table must not stay resident on the host —
         # per-engine footprint ~1/E is the point of sharding
         self.data.release_host_tables()
@@ -143,8 +162,13 @@ class ShardedBatchedEngine:
     def district_table_bytes_per_device(self) -> int:
         return self.data.district_bytes_per_device()
 
+    def border_table_bytes_per_device(self) -> int:
+        """Resident bytes of B on each device: ``n·q·4`` replicated,
+        ``ceil(n/E)·q·4`` row-sharded."""
+        return self.data.border_bytes_per_device()
+
     def size_bytes(self) -> int:
-        """Per-device resident bytes (district block + replicated B)."""
+        """Per-device resident bytes (district block + B share)."""
         return self.data.bytes_per_device()
 
     def row_ids(self, ss: np.ndarray, ts: np.ndarray

@@ -3,6 +3,17 @@
 ``EdgeSystem`` is the functional model of the deployment (the discrete-
 event simulator adds time on top; the sharded_oracle maps the same logic
 onto a device mesh).
+
+Paper map: ``query``/``query_batched`` implement the §4.2 query rules
+(rule 1 same-district local, rule 2 same-district via another client's
+server, rule 3 cross-district through the border table B at the
+computing center); during a rebuild window (center pushed a new index
+version, shortcuts not yet installed) answers are served from the stale
+L_i under the Theorem-3 rebuild-window certificate (λ ≤ Local Bound ⇒
+still exact), and the uncertified residue waits for the shortcut push.
+``_current_engine`` snapshots one index version into a batched serving
+engine and swaps it — including the device-resident B shards — whenever
+the center's version moves (see docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -18,6 +29,12 @@ from .server import EdgeServer
 
 INF = np.float32(np.inf)
 
+# auto-pick threshold for row-sharding the border table B: replicating B
+# costs n·q·4 bytes per device and zero collectives, so it stays
+# replicated until it is big enough to matter (override per-system with
+# ``EdgeSystem.shard_border``)
+SHARD_BORDER_AUTO_BYTES = 64 << 20
+
 
 @dataclass
 class EdgeSystem:
@@ -31,6 +48,11 @@ class EdgeSystem:
     # engine selection: None = auto (sharded iff the backend exposes more
     # than one device), True/False = force sharded/replicated
     prefer_sharded: bool | None = None
+    # border-table placement within the sharded engine: None = auto (row-
+    # shard B once its replicated footprint n·q·4 exceeds
+    # SHARD_BORDER_AUTO_BYTES), True/False = force sharded/replicated B.
+    # Only consulted when the sharded engine is selected.
+    shard_border: bool | None = None
     # steady-state serving engine, snapshot of one index version
     _engine: object | None = field(default=None, repr=False)
     _engine_key: tuple | None = field(default=None, repr=False)
@@ -157,7 +179,9 @@ class EdgeSystem:
         backends get the replicated ``BatchedQueryEngine``; multi-device
         backends shard the district tables over the ``edge`` mesh axis
         (``ShardedBatchedEngine``) so the table scales past one device's
-        memory. ``prefer_sharded`` overrides the auto choice."""
+        memory, and within the sharded engine B itself is row-sharded
+        once its replicated footprint crosses SHARD_BORDER_AUTO_BYTES.
+        ``prefer_sharded`` / ``shard_border`` override the auto choices."""
         if any(srv.augmented is None
                or srv.augmented_version != self.center.version
                for srv in self.servers):
@@ -166,22 +190,38 @@ class EdgeSystem:
         num_devices = len(jax.devices())
         sharded = (num_devices > 1 if self.prefer_sharded is None
                    else self.prefer_sharded)
+        btable = self.center.border_labels.table
+        shard_border = sharded and (
+            btable.size * 4 > SHARD_BORDER_AUTO_BYTES
+            if self.shard_border is None else self.shard_border)
         key = (self.center.version,
                tuple(srv.augmented_version for srv in self.servers),
-               sharded, num_devices)
+               sharded, shard_border, num_devices)
         if self._engine is None or self._engine_key != key:
             from .engine import BatchedQueryEngine, ShardedBatchedEngine
-            cls = ShardedBatchedEngine if sharded else BatchedQueryEngine
             # drop the stale engine's device buffers BEFORE building the
             # replacement: holding both doubles peak device memory at
             # every rebuild, exactly where sharded tables run near limits
+            # (for the sharded engines this swap also replaces the
+            # device-resident B shards with the new version's)
             self._engine = None
-            self._engine = cls(
-                self.center.border_labels.table,
-                [srv.augmented for srv in self.servers],
-                self.partition.assignment)
+            if sharded:
+                self._engine = ShardedBatchedEngine(
+                    btable, [srv.augmented for srv in self.servers],
+                    self.partition.assignment, shard_border=shard_border)
+            else:
+                self._engine = BatchedQueryEngine(
+                    btable, [srv.augmented for srv in self.servers],
+                    self.partition.assignment)
             self._engine_key = key
         return self._engine
+
+    def current_engine(self):
+        """Public accessor for the active serving-engine snapshot (None
+        during a rebuild window). Use this — not the underscore internals
+        — to inspect which layout the auto-pick chose and its
+        ``size_bytes()`` footprint."""
+        return self._current_engine()
 
     def query_many(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
         return self.query_batched(ss, ts)

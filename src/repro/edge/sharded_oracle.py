@@ -4,10 +4,23 @@ Every device of the ``edge`` mesh axis plays the role of a group of edge
 servers: it owns a *blocked* slice of the combined hub-aligned district
 tables — ``dpd = ceil(m / E)`` districts per device, every district
 densified to the same ``(kmax, W)`` layout the replicated
-``BatchedQueryEngine`` uses — while the border-label table B (the
-computing center) is replicated. This is how a label store scales past a
-single device's memory: the district tables are partitioned, so the
-per-device footprint is ~1/E of the replicated engine's.
+``BatchedQueryEngine`` uses — plus the border-label table B (the
+computing center) in one of two placements:
+
+* **replicated** (default): every device holds all n rows of B at its
+  natural width q (NOT padded to W — the gathered rows are padded
+  per-batch inside ``join_sharded_gathered``), so rule-3 queries cost
+  zero extra collectives;
+* **row-sharded** (``shard_border=True``): each device holds only a
+  ``ceil(n/E)`` row-slice of B, and the batched join assembles the
+  touched rows with a ragged gather + ``pmin``
+  (``join_sharded_border_gathered``). Nothing in the serving path is
+  replicated anymore — per-device bytes fall from
+  ``dpd·kmax·W·4 + n·q·4`` to ``dpd·kmax·W·4 + ceil(n/E)·q·4``.
+
+This is how a label store scales past a single device's memory: every
+structure is partitioned, so the per-device footprint is ~1/E of the
+full index.
 
 A query batch is preprocessed on the host into (owner, row) coordinates:
 
@@ -53,9 +66,13 @@ INF = np.float32(np.inf)
 class ShardedOracleData:
     """Host-packed blocked layout. ``district_table`` rows are grouped by
     district (``kmax`` rows each) so slicing the leading axis into E equal
-    chunks hands device d exactly districts ``d·dpd .. d·dpd+dpd-1``."""
+    chunks hands device d exactly districts ``d·dpd .. d·dpd+dpd-1``.
+    ``btable`` is stored at its NATURAL width q (not the combined W)
+    except in the ``combined=True`` single-buffer layout; with
+    ``border_sharded`` its rows are padded to ``ceil(n/E)·E`` so the
+    leading axis shards evenly over the mesh too."""
     district_table: np.ndarray | None  # (m_pad·kmax, W) f32 — shardable
-    btable: np.ndarray | None   # (n, W) f32 — replicated center table B
+    btable: np.ndarray | None   # (n_pad, q) f32 — center table B
     local_pos: np.ndarray       # (n,) int64: global id → local slot
     assignment: np.ndarray      # (n,) int64: global id → district
     kmax: int
@@ -66,17 +83,26 @@ class ShardedOracleData:
     # bytes accounting never touch the arrays again)
     districts_per_device: int = field(init=False)
     width: int = field(init=False)
+    border_width: int = field(init=False)
+    border_rows_per_device: int = field(init=False)
     num_vertices: int = field(init=False)
     # single-allocation [districts; B] buffer (combined=True packing);
     # district_table/btable are views into it — the replicated engine
     # ships this to the device without a second host copy
     combined_table: np.ndarray | None = None
+    # True ⇒ btable is a row-sharded (n_pad, q) layout: device d owns
+    # rows d·rpd .. d·rpd+rpd-1 (rpd = ceil(n/E))
+    border_sharded: bool = False
 
     def __post_init__(self):
         self.districts_per_device = (self.district_table.shape[0]
                                      // self.kmax // self.num_devices)
         self.width = self.district_table.shape[1]
-        self.num_vertices = self.btable.shape[0]
+        self.border_width = self.btable.shape[1]
+        self.border_rows_per_device = (
+            self.btable.shape[0] // self.num_devices
+            if self.border_sharded else self.btable.shape[0])
+        self.num_vertices = len(self.local_pos)
 
     @property
     def cross_base(self) -> int:
@@ -95,54 +121,81 @@ class ShardedOracleData:
     def district_bytes_per_device(self) -> int:
         return self.districts_per_device * self.kmax * self.width * 4
 
+    def border_bytes_per_device(self) -> int:
+        """Resident bytes of B per device: all ``n·q·4`` when replicated
+        (natural width), a ``ceil(n/E)·q·4`` row-slice when sharded."""
+        return self.border_rows_per_device * self.border_width * 4
+
     def bytes_per_device(self) -> int:
-        """Resident bytes per device: district block + replicated B."""
+        """Resident bytes per device: district block + this device's
+        share of B (see the memory model in docs/ARCHITECTURE.md)."""
         return (self.district_bytes_per_device()
-                + self.num_vertices * self.width * 4)
+                + self.border_bytes_per_device())
 
 
 def pack_tables(btable: np.ndarray, locals_: list[LocalIndex],
                 assignment: np.ndarray, num_devices: int, *,
-                combined: bool = False) -> ShardedOracleData:
+                combined: bool = False,
+                shard_border: bool = False) -> ShardedOracleData:
     """Blocked packing of the combined hub-aligned table: districts padded
     to ``m_pad = dpd·E`` so the leading axis shards evenly, every district
     table densified to (kmax, W) with the same inf padding the replicated
     engine uses (padding lanes never win a min-plus join).
 
+    B is kept at its natural width q: the device join pads the few
+    *gathered* rows per batch to W instead of storing ``n·(W−q)`` dead
+    lanes. ``shard_border=True`` additionally row-pads B to
+    ``n_pad = rpd·E`` so it shards evenly over the mesh (device d owns
+    rows ``d·rpd .. d·rpd+rpd-1``).
+
     ``combined=True`` lays districts and B out in ONE allocation (the
-    replicated engine's device layout) so no second host copy is needed
-    to stack them; ``district_table``/``btable`` become views."""
+    replicated engine's device layout, B padded to W there) so no second
+    host copy is needed to stack them; ``district_table``/``btable``
+    become views."""
+    assert not (combined and shard_border), \
+        "combined packing keeps B inside the single replicated buffer"
     n = len(assignment)
     m = len(locals_)
     dpd = -(-m // num_devices)
     m_pad = dpd * num_devices
     kmax = max(len(li.vertices) for li in locals_)
-    width = max(kmax, btable.shape[1], 1)
+    q = btable.shape[1]
+    width = max(kmax, q, 1)
     rows = m_pad * kmax
     if combined:
         buf = np.full((rows + n, width), INF, dtype=np.float32)
         table, bt = buf[:rows], buf[rows:]
+        bt[:, :q] = btable
     else:
         buf = None
         table = np.full((rows, width), INF, dtype=np.float32)
-        bt = np.full((n, width), INF, dtype=np.float32)
+        if shard_border:
+            n_pad = -(-n // num_devices) * num_devices
+            bt = np.empty((n_pad, q), dtype=np.float32)
+            bt[:n] = btable
+            bt[n:] = INF
+        else:
+            # zero-copy when the caller's B is already f32-contiguous:
+            # pack never mutates it and the engines device_put + release
+            bt = np.ascontiguousarray(btable, dtype=np.float32)
     local_pos = np.zeros(n, dtype=np.int64)
     for i, li in enumerate(locals_):
         k = len(li.vertices)
         table[i * kmax:i * kmax + k, :k] = li.dense_table()
         local_pos[li.vertices] = np.arange(k, dtype=np.int64)
-    bt[:, :btable.shape[1]] = btable
     return ShardedOracleData(table, bt, local_pos,
                              assignment.astype(np.int64), kmax,
-                             num_devices, m, combined_table=buf)
+                             num_devices, m, combined_table=buf,
+                             border_sharded=shard_border)
 
 
 def pack_for_mesh(part: Partition, bl: BorderLabels,
-                  locals_: list[LocalIndex], num_devices: int
-                  ) -> ShardedOracleData:
+                  locals_: list[LocalIndex], num_devices: int, *,
+                  shard_border: bool = False) -> ShardedOracleData:
     """Paper-facing wrapper: pack a built index for an E-device edge mesh."""
     return pack_tables(bl.table.astype(np.float32), locals_,
-                       part.assignment, num_devices)
+                       part.assignment, num_devices,
+                       shard_border=shard_border)
 
 
 def prepare_queries(data: ShardedOracleData, ss: np.ndarray,
@@ -165,22 +218,32 @@ _FN_CACHE: dict = {}
 
 
 def make_sharded_query_fn(mesh: Mesh, axis: str = "edge",
-                          use_pallas: bool = False):
+                          use_pallas: bool = False,
+                          shard_border: bool = False):
     """Jitted ``fn(district_block, btable, owner, rs, rt)`` bound to
     ``mesh``: per-device dense gather-join over [block; B] + one pmin.
-    Cached per (mesh, axis, use_pallas) so engine rebuilds after traffic
-    updates reuse the compiled program."""
-    key = (mesh, axis, use_pallas)
+    With ``shard_border`` the btable argument is the row-sharded B and
+    the touched rows are assembled by ragged gather + pmin first. Cached
+    per (mesh, axis, use_pallas, shard_border) so engine rebuilds after
+    traffic updates reuse the compiled program."""
+    key = (mesh, axis, use_pallas, shard_border)
     if key in _FN_CACHE:
         return _FN_CACHE[key]
 
-    def _device_fn(table, btable, owner, rs, rt):
-        return lj.join_sharded_gathered(table, btable, owner, rs, rt,
-                                        axis=axis, use_pallas=use_pallas)
+    if shard_border:
+        def _device_fn(table, bshard, owner, rs, rt):
+            return lj.join_sharded_border_gathered(
+                table, bshard, owner, rs, rt,
+                axis=axis, use_pallas=use_pallas)
+    else:
+        def _device_fn(table, btable, owner, rs, rt):
+            return lj.join_sharded_gathered(table, btable, owner, rs, rt,
+                                            axis=axis, use_pallas=use_pallas)
 
     sharded = _shard_map(
         _device_fn, mesh=mesh,
-        in_specs=(P(axis), P(), P(), P(), P()),
+        in_specs=(P(axis), P(axis) if shard_border else P(),
+                  P(), P(), P()),
         out_specs=P(),
     )
     fn = jax.jit(sharded)
@@ -211,11 +274,13 @@ def sharded_query(data: ShardedOracleData, mesh: Mesh,
     tables device-resident across batches."""
     if use_pallas is None:
         use_pallas = jax.default_backend() != "cpu"
-    fn = make_sharded_query_fn(mesh, axis, use_pallas)
+    fn = make_sharded_query_fn(mesh, axis, use_pallas,
+                               shard_border=data.border_sharded)
     dev_sharding = NamedSharding(mesh, P(axis))
     rep = NamedSharding(mesh, P())
     table = jax.device_put(data.district_table, dev_sharding)
-    btable = jax.device_put(data.btable, rep)
+    btable = jax.device_put(data.btable,
+                            dev_sharding if data.border_sharded else rep)
     q = {k: jax.device_put(jnp.asarray(queries[k]), rep)
          for k in ("owner", "rs", "rt")}
     return np.asarray(fn(table, btable, q["owner"], q["rs"], q["rt"]))

@@ -1,4 +1,25 @@
-"""jit'd public wrappers for the query-join kernels."""
+"""jit'd public wrappers for the query-join kernels.
+
+Paper map (anchors refer to PAPER.md / the source paper):
+
+* ``join`` / ``join_gathered`` — Definition 1's 2-hop join λ(s,t,·) over
+  dense hub-aligned rows; serves §4.2 rule 3 (cross-district via the
+  border table B) and rules 1/2 once districts are densified to the
+  combined layout (``edge/engine.py``).
+* ``join_sparse`` / ``join_sparse_gathered`` — the same join over padded
+  sparse labels L_i; the §4.2 rule-1/2 path during rebuild windows.
+* ``join_with_bound`` / ``bound_gathered`` — the fused λ + Local Bound
+  (Definition 5) pass that certifies Theorem 3: a rebuild-window answer
+  from the *stale* L_i is exact whenever λ ≤ LB, at no extra HBM sweep.
+* ``join_sharded_gathered`` — per-device half of the mesh-sharded §4.2
+  dispatch: district block sharded over the ``edge`` axis, border table
+  replicated at its natural width q (gathered rows are padded to the
+  combined width W here, so B never stores W − q dead lanes).
+* ``join_sharded_border_gathered`` — the fully-sharded variant: B itself
+  is row-sharded, the touched rows are assembled with a ragged
+  gather + ``pmin`` collective, then joined exactly like the replicated
+  case. No structure in the serving path is replicated anymore.
+"""
 from __future__ import annotations
 
 import jax
@@ -91,13 +112,19 @@ def join_sharded_gathered(block: jnp.ndarray, btable: jnp.ndarray,
                           use_pallas: bool = True) -> jnp.ndarray:
     """Per-device half of the mesh-sharded serving join; runs INSIDE a
     ``shard_map`` over ``axis``. ``block`` is this device's slice of the
-    district tables, ``btable`` the replicated border table. Row ids
-    ``rs``/``rt`` below ``block.shape[0]`` gather from the block, the
-    rest from B (offset past the block); the dense join runs on every
-    device, lanes whose ``owner`` isn't this device are masked to +inf,
-    and a ``pmin`` over the axis assembles the answer vector."""
+    district tables (width W), ``btable`` the replicated border table at
+    its *natural* width q ≤ W (storing B at W would waste n·(W−q)·4
+    resident bytes per device; instead the gathered (batch, q) rows are
+    inf-padded to W here, which is bit-for-bit equivalent because +inf
+    lanes never win a min-plus join). Row ids ``rs``/``rt`` below
+    ``block.shape[0]`` gather from the block, the rest from B (offset
+    past the block); the dense join runs on every device, lanes whose
+    ``owner`` isn't this device are masked to +inf, and a ``pmin`` over
+    the axis assembles the answer vector."""
     dev = jax.lax.axis_index(axis)
     cross_base = block.shape[0]
+    wpad = block.shape[1] - btable.shape[1]
+    assert wpad >= 0, "border table wider than the combined width"
 
     def gather(rows):
         # two gathers + a select keeps both tables device-resident (no
@@ -106,9 +133,63 @@ def join_sharded_gathered(block: jnp.ndarray, btable: jnp.ndarray,
         local = rows < cross_base
         dist = block[jnp.where(local, rows, 0)]
         bord = btable[jnp.where(local, 0, rows - cross_base)]
+        if wpad:
+            bord = jnp.pad(bord, ((0, 0), (0, wpad)),
+                           constant_values=jnp.inf)
         return jnp.where(local[:, None], dist, bord)
 
     ans = join(gather(rs), gather(rt), use_pallas=use_pallas)
+    return jax.lax.pmin(jnp.where(owner == dev, ans, jnp.inf), axis)
+
+
+def join_sharded_border_gathered(block: jnp.ndarray, bshard: jnp.ndarray,
+                                 owner: jnp.ndarray, rs: jnp.ndarray,
+                                 rt: jnp.ndarray, *, axis: str,
+                                 use_pallas: bool = True) -> jnp.ndarray:
+    """Fully-sharded serving join: like ``join_sharded_gathered`` but the
+    border table is ROW-SHARDED over ``axis`` too — ``bshard`` is this
+    device's ``ceil(n/E)`` row-slice of B at natural width q. Runs INSIDE
+    a ``shard_map``.
+
+    Row ids keep the replicated convention (>= ``block.shape[0]`` means
+    "row v of B"), so the host routing pass is layout-agnostic. The
+    touched B rows are assembled by a ragged gather + ``pmin``: each
+    device gathers the rows it owns (others contribute +inf), and ONE
+    fused (2·batch, q) min-collective covering both endpoints leaves
+    every device holding exactly the B rows this batch needs —
+    collective traffic scales with the batch, never with n, and a
+    single launch amortizes the collective latency. The assembled rows
+    are inf-padded to the combined width W and joined exactly like the
+    replicated case."""
+    dev = jax.lax.axis_index(axis)
+    cross_base = block.shape[0]
+    rows_pd = bshard.shape[0]       # = ceil(n/E) ≥ 1 whenever n ≥ 1
+    wpad = block.shape[1] - bshard.shape[1]
+    assert wpad >= 0, "border shard wider than the combined width"
+
+    def ragged(rows):
+        local = rows < cross_base
+        gid = jnp.where(local, 0, rows - cross_base)
+        own = (~local) & (gid // rows_pd == dev)
+        vals = bshard[jnp.where(own, gid % rows_pd, 0)]
+        return jnp.where(own[:, None], vals, jnp.inf)
+
+    # after the pmin every device holds the true B row for each cross
+    # lane (non-owners contributed +inf); s and t lanes are stacked so
+    # both endpoints ride one collective launch
+    both = jax.lax.pmin(jnp.concatenate([ragged(rs), ragged(rt)]), axis)
+    if wpad:
+        both = jnp.pad(both, ((0, 0), (0, wpad)),
+                       constant_values=jnp.inf)
+    bs_rows, bt_rows = jnp.split(both, 2)
+
+    def gather(rows, bord):
+        local = rows < cross_base
+        dist = block[jnp.where(local, rows, 0)]
+        return jnp.where(local[:, None], dist, bord)
+
+    ans = join(gather(rs, bs_rows), gather(rt, bt_rows),
+               use_pallas=use_pallas)
     return jax.lax.pmin(jnp.where(owner == dev, ans, jnp.inf), axis)
 
 

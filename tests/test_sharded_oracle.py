@@ -3,9 +3,10 @@
 The 1-device cases run in-process; the 8-device case re-executes this
 file's builders in a subprocess with XLA_FLAGS so the main test session
 keeps seeing a single CPU device. The 8-device job asserts the full
-acceptance contract: ShardedBatchedEngine == replicated
-BatchedQueryEngine == query_loop bit-for-bit on mixed-rule batches, and
-the per-device district-table footprint ≤ 1/4 of the replicated table's.
+acceptance contract: ShardedBatchedEngine (both border-table placements)
+== replicated BatchedQueryEngine == query_loop bit-for-bit on mixed-rule
+batches, the per-device district-table footprint ≤ 1/4 of the replicated
+table's, and the B-sharded resident bytes strictly below replicated-B's.
 """
 import os
 import subprocess
@@ -39,8 +40,9 @@ def _build_case():
 
 
 def _engine_case():
-    """ShardedBatchedEngine vs replicated engine vs scalar loop on a
-    mixed rule-1/2/3 batch with s == t pairs. Returns footprints too."""
+    """ShardedBatchedEngine (both border placements) vs replicated engine
+    vs scalar loop on a mixed rule-1/2/3 batch with s == t pairs.
+    Returns footprints too."""
     from repro.core import bfs_grow_partition, grid_road_network
     from repro.edge import (BatchedQueryEngine, EdgeSystem,
                             ShardedBatchedEngine)
@@ -57,12 +59,16 @@ def _engine_case():
             part.assignment)
     replicated = BatchedQueryEngine(*args)
     sharded = ShardedBatchedEngine(*args)
+    border = ShardedBatchedEngine(*args, shard_border=True)
     return {"rep": replicated.query(ss, ts),
             "shard": sharded.query(ss, ts),
+            "bshard": border.query(ss, ts),
             "loop": system.query_loop(ss, ts),
             "auto": system.query_batched(ss, ts),
             "auto_cls": type(system._current_engine()).__name__,
             "per_dev_bytes": sharded.district_table_bytes_per_device(),
+            "resident_bytes": sharded.size_bytes(),
+            "border_resident_bytes": border.size_bytes(),
             "rep_bytes": replicated.size_bytes(),
             "ndev": sharded.num_devices}
 
@@ -79,11 +85,15 @@ def test_sharded_engine_in_process_matches():
     import jax
     r = _engine_case()
     np.testing.assert_array_equal(r["rep"], r["shard"])
+    np.testing.assert_array_equal(r["bshard"], r["shard"])
     np.testing.assert_array_equal(r["shard"], r["loop"])
     expected = ("ShardedBatchedEngine" if len(jax.devices()) > 1
                 else "BatchedQueryEngine")
     assert r["auto_cls"] == expected
     np.testing.assert_array_equal(r["auto"], r["loop"])
+    # B-sharded resident strictly below replicated-B on a real mesh
+    if len(jax.devices()) > 1:
+        assert r["border_resident_bytes"] < r["resident_bytes"]
 
 
 def _run_under_8_devices(code: str) -> None:
@@ -120,9 +130,11 @@ def test_sharded_engine_eight_devices_matches_and_shrinks():
         "r = m._engine_case();"
         "assert r['ndev'] == 8;"
         "np.testing.assert_array_equal(r['rep'], r['shard']);"
+        "np.testing.assert_array_equal(r['bshard'], r['shard']);"
         "np.testing.assert_array_equal(r['shard'], r['loop']);"
         "assert r['auto_cls'] == 'ShardedBatchedEngine';"
         "np.testing.assert_array_equal(r['auto'], r['loop']);"
         "assert r['per_dev_bytes'] * 4 <= r['rep_bytes'];"
+        "assert r['border_resident_bytes'] < r['resident_bytes'];"
         "print('OK8')"
     )

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Docs CI gate: link-check the markdown docs and execute the README's
+python snippets.
+
+Checks, in order:
+
+1. every relative markdown link in README.md / ROADMAP.md / docs/*.md
+   resolves to an existing file;
+2. every backticked repo path (``src/...py``, ``docs/...md``, ...)
+   mentioned in those files exists — docs must not reference code that
+   was moved or deleted;
+3. every fenced ```python block in README.md runs to completion with
+   PYTHONPATH=src (the "Choosing an engine" quickstart, notably), so
+   the documented API can't silently rot.
+
+Run from the repo root:  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+MD_FILES = [ROOT / "README.md", ROOT / "ROADMAP.md",
+            *sorted((ROOT / "docs").glob("*.md"))]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backticked repo-relative paths: at least one '/' and a known suffix,
+# optionally followed by CLI flags inside the same backticks
+CODE_PATH = re.compile(r"`([\w./-]+/[\w.-]+\.(?:py|md|yml|txt))[^`]*`")
+PY_BLOCK = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for f in MD_FILES:
+        text = f.read_text()
+        rel = f.relative_to(ROOT)
+        for m in MD_LINK.finditer(text):
+            target = m.group(1).split("#")[0]
+            if not target or target.startswith(("http://", "https://",
+                                                "mailto:")):
+                continue
+            if not (f.parent / target).exists():
+                errors.append(f"{rel}: broken link -> {target}")
+        for m in CODE_PATH.finditer(text):
+            # docs name paths either repo-relative or relative to the
+            # package root (edge/engine.py ≡ src/repro/edge/engine.py)
+            if not any((base / m.group(1)).exists()
+                       for base in (ROOT, ROOT / "src", ROOT / "src/repro")):
+                errors.append(f"{rel}: missing path -> {m.group(1)}")
+    return errors
+
+
+def run_readme_snippets() -> list[str]:
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT / "src")]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    blocks = PY_BLOCK.findall((ROOT / "README.md").read_text())
+    if not blocks:
+        return ["README.md: no python snippet found (quickstart removed?)"]
+    for i, code in enumerate(blocks):
+        try:
+            out = subprocess.run([sys.executable, "-c", code], env=env,
+                                 cwd=ROOT, capture_output=True, text=True,
+                                 timeout=600)
+        except subprocess.TimeoutExpired:
+            errors.append(f"README.md python block #{i + 1} timed out "
+                          f"(600 s)")
+            continue
+        if out.returncode != 0:
+            errors.append(f"README.md python block #{i + 1} failed:\n"
+                          f"{out.stderr[-1500:]}")
+        else:
+            sys.stdout.write(out.stdout)
+    return errors
+
+
+def main() -> int:
+    errors = check_links()
+    errors += run_readme_snippets()
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    print(f"check_docs: {len(MD_FILES)} files linted, "
+          f"{'FAILED' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
