@@ -153,8 +153,7 @@ def overlay_matrix(g: Graph, part: Partition,
         w[np.ix_(bslots, bslots)] = np.minimum(w[np.ix_(bslots, bslots)],
                                                block)
     # original cross-district edges (both endpoints are borders by Def. 4)
-    n = g.num_vertices
-    src = np.repeat(np.arange(n, dtype=np.int32), np.diff(g.indptr))
+    src = g.arc_sources()
     cross = part.assignment[src] != part.assignment[g.indices]
     su, sv = slot[src[cross]], slot[g.indices[cross]]
     ww = g.weights[cross]

@@ -51,10 +51,16 @@ class Graph:
         lo, hi = self.indptr[v], self.indptr[v + 1]
         return self.indices[lo:hi], self.weights[lo:hi]
 
+    def arc_sources(self) -> np.ndarray:
+        """Source vertex of every CSR arc (int32, parallel to
+        ``indices``/``weights``) — the expansion every vectorized pass
+        over the arcs starts from."""
+        return np.repeat(np.arange(self.num_vertices, dtype=np.int32),
+                         np.diff(self.indptr))
+
     def edge_list(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Return (u, v, w) with u < v, one row per undirected edge."""
-        n = self.num_vertices
-        src = np.repeat(np.arange(n, dtype=np.int32), np.diff(self.indptr))
+        src = self.arc_sources()
         mask = src < self.indices
         return src[mask], self.indices[mask], self.weights[mask]
 
@@ -81,7 +87,7 @@ class Graph:
     def _arc_keys(self) -> np.ndarray:
         """Canonical undirected key per CSR arc (both arcs share a key)."""
         n = self.num_vertices
-        src = np.repeat(np.arange(n, dtype=np.int64), np.diff(self.indptr))
+        src = self.arc_sources().astype(np.int64)
         dst = self.indices.astype(np.int64)
         return np.minimum(src, dst) * n + np.maximum(src, dst)
 

@@ -156,32 +156,83 @@ def stage_d_prune(table: jnp.ndarray, border_rows: jnp.ndarray,
                              jnp.full_like(table, jnp.inf))
 
 
-def build_border_labels_jax(g: Graph, part: Partition, *,
-                            prune: bool = True,
-                            use_pallas: bool = False) -> BorderLabels:
-    """Host wrapper: pack → run jitted stages → BorderLabels."""
+@dataclass
+class BuildState:
+    """Every intermediate of one full pipeline run, host-side.
+
+    The incremental-update subsystem (``repro.update``) caches this so a
+    traffic delta can re-run only the stages (and the district / row
+    subsets) the delta actually touches; ``weights`` is the CSR weight
+    snapshot the state was built from, the anchor deltas classify
+    against.
+    """
+    packed: PackedDistricts
+    intra: np.ndarray        # (m, bmax, kmax) stage-A output
+    overlay: np.ndarray      # (q, q) stage-B input
+    closure: np.ndarray      # (q, q) stage-B output
+    unpruned: np.ndarray     # (n, q) stage-C output
+    table: np.ndarray        # (n, q) final (stage-D output when pruned)
+    prune_order: np.ndarray | None  # (q,) int32 hub order, None if unpruned
+    weights: np.ndarray      # (2m,) CSR weights the state corresponds to
+
+    def labels(self) -> BorderLabels:
+        return BorderLabels(self.packed.border_ids, self.table)
+
+
+def hub_prune_order(g: Graph, border_ids: np.ndarray) -> np.ndarray:
+    """Stage-D hub-slot order (depends on topology only, never weights)."""
+    push = degree_order(g, subset=border_ids)
+    rank = rank_of(push, g.num_vertices)
+    return np.argsort(rank[border_ids], kind="stable").astype(np.int32)
+
+
+def build_border_labels_stages(g: Graph, part: Partition, *,
+                               prune: bool = True,
+                               use_pallas: bool = False
+                               ) -> tuple[BorderLabels, BuildState]:
+    """Full pipeline run that also returns every stage's host-side output
+    (the cache the incremental repair in ``repro.update`` warm-starts
+    from). ``build_border_labels_jax`` is the state-discarding wrapper."""
     packed = pack_districts(g, part)
     n = g.num_vertices
     q = len(packed.border_ids)
     if q == 0:
-        return BorderLabels(packed.border_ids,
-                            np.full((n, 0), INF, dtype=np.float32))
+        empty = np.full((n, 0), INF, dtype=np.float32)
+        state = BuildState(packed, np.zeros((packed.num_districts,
+                                             packed.bmax, packed.kmax),
+                                            dtype=np.float32),
+                           np.zeros((0, 0), dtype=np.float32),
+                           np.zeros((0, 0), dtype=np.float32),
+                           empty, empty, None, g.weights)
+        return BorderLabels(packed.border_ids, empty), state
     intra = stage_a_intra_distances(
         jnp.asarray(packed.adj), jnp.asarray(packed.border_pos),
         iters=packed.kmax, use_pallas=use_pallas)
     overlay = _overlay_from_intra(g, part, packed, np.asarray(intra))
     clo = stage_b_overlay_closure(jnp.asarray(overlay),
                                   use_pallas=use_pallas)
-    table = stage_c_full_table(intra, jnp.asarray(packed.border_slot),
-                               clo, jnp.asarray(packed.vertex_ids), n,
-                               use_pallas=use_pallas)
+    unpruned = stage_c_full_table(intra, jnp.asarray(packed.border_slot),
+                                  clo, jnp.asarray(packed.vertex_ids), n,
+                                  use_pallas=use_pallas)
+    order = None
+    table = unpruned
     if prune:
-        push = degree_order(g, subset=packed.border_ids)
-        rank = rank_of(push, n)
-        order = np.argsort(rank[packed.border_ids], kind="stable")
-        table = stage_d_prune(table, jnp.asarray(packed.border_ids),
-                              jnp.asarray(order.astype(np.int32)))
-    return BorderLabels(packed.border_ids, np.asarray(table))
+        order = hub_prune_order(g, packed.border_ids)
+        table = stage_d_prune(unpruned, jnp.asarray(packed.border_ids),
+                              jnp.asarray(order))
+    state = BuildState(packed, np.asarray(intra), overlay, np.asarray(clo),
+                       np.asarray(unpruned), np.asarray(table), order,
+                       g.weights)
+    return BorderLabels(packed.border_ids, state.table), state
+
+
+def build_border_labels_jax(g: Graph, part: Partition, *,
+                            prune: bool = True,
+                            use_pallas: bool = False) -> BorderLabels:
+    """Host wrapper: pack → run jitted stages → BorderLabels."""
+    labels, _ = build_border_labels_stages(g, part, prune=prune,
+                                           use_pallas=use_pallas)
+    return labels
 
 
 def _overlay_from_intra(g: Graph, part: Partition, packed: PackedDistricts,
@@ -203,7 +254,7 @@ def _overlay_from_intra(g: Graph, part: Partition, packed: PackedDistricts,
     nvert = g.num_vertices
     slot = -np.ones(nvert, dtype=np.int64)
     slot[packed.border_ids] = np.arange(q)
-    src = np.repeat(np.arange(nvert, dtype=np.int32), np.diff(g.indptr))
+    src = g.arc_sources()
     cross = part.assignment[src] != part.assignment[g.indices]
     np.minimum.at(w, (slot[src[cross]], slot[g.indices[cross]]),
                   g.weights[cross])

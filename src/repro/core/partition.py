@@ -34,7 +34,7 @@ class Partition:
 def border_mask(g: Graph, part: Partition) -> np.ndarray:
     """Definition 4: v is a border iff it has an edge leaving its district."""
     n = g.num_vertices
-    src = np.repeat(np.arange(n, dtype=np.int32), np.diff(g.indptr))
+    src = g.arc_sources()
     cross = part.assignment[src] != part.assignment[g.indices]
     mask = np.zeros(n, dtype=bool)
     mask[src[cross]] = True

@@ -7,7 +7,9 @@ from .server import EdgeServer
 from .router import EdgeSystem
 from .engine import BatchedQueryEngine, ShardedBatchedEngine
 from .simulator import (BatchPolicy, QueryEvent, SimResult, UpdateSchedule,
-                        make_trace, simulate_centralized, simulate_edge)
+                        VariableUpdateSchedule, make_trace,
+                        run_update_epochs, simulate_centralized,
+                        simulate_edge)
 from .sharded_oracle import (ShardedOracleData, default_edge_mesh,
                              pack_for_mesh, pack_tables, prepare_queries,
                              make_sharded_query_fn, sharded_query)

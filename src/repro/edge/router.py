@@ -58,8 +58,9 @@ class EdgeSystem:
     _engine_key: tuple | None = field(default=None, repr=False)
 
     @classmethod
-    def deploy(cls, g: Graph, part: Partition) -> "EdgeSystem":
-        center = ComputingCenter(g, part)
+    def deploy(cls, g: Graph, part: Partition,
+               builder: str = "reference") -> "EdgeSystem":
+        center = ComputingCenter(g, part, builder=builder)
         center.rebuild()
         servers = [EdgeServer.bootstrap(g, part, i)
                    for i in range(part.num_districts)]
@@ -68,19 +69,69 @@ class EdgeSystem:
                                 center.version)
         return cls(g, part, center, servers)
 
-    def apply_traffic_update(self, new_weights: np.ndarray) -> dict:
-        """Full update cycle: edge servers refresh local indexes, center
-        rebuilds B, shortcuts are pushed back down. Returns timings."""
-        g2 = self.graph.with_weights(new_weights)
+    def apply_traffic_update(self, new_weights: np.ndarray,
+                             incremental: bool = False) -> dict:
+        """Traffic-epoch update cycle; returns timings.
+
+        ``incremental=False`` — the paper's full cycle: every edge server
+        refreshes its local index, the center rebuilds B from scratch,
+        shortcuts are pushed back down everywhere.
+
+        ``incremental=True`` — delta-scoped cycle (``repro.update``):
+        only districts with a dirty intra edge refresh their local index,
+        the center repairs B (bit-for-bit equal to a full rebuild), and
+        shortcuts are reinstalled only where the shortcut matrix or the
+        local index actually moved.  Clean districts' servers just adopt
+        the new version number: their L_i⁺ inputs are bitwise unchanged,
+        so they keep serving without ever entering a rebuild window, and
+        the engine swap re-densifies only the touched districts (clean
+        ``LocalIndex`` objects keep their cached dense tables).
+        """
+        if not incremental:
+            g2 = self.graph.with_weights(new_weights)
+            self.graph = g2
+            local_s = [srv.refresh_local(g2, self.partition)
+                       for srv in self.servers]
+            bl_s = self.center.rebuild(new_weights)
+            shortcut_s = [srv.install_shortcuts(
+                g2, self.partition,
+                self.center.shortcuts_for(srv.district_id),
+                self.center.version) for srv in self.servers]
+            return {"local_refresh_s": local_s, "bl_rebuild_s": bl_s,
+                    "shortcut_install_s": shortcut_s,
+                    "incremental": False}
+        rep = self.center.apply_delta(new_weights)
+        if rep["noop"]:
+            return {"local_refresh_s": {}, "bl_rebuild_s": 0.0,
+                    "shortcut_install_s": {}, "incremental": True,
+                    "dirty_districts": [], "stale_shortcut_districts": [],
+                    "clean_districts": list(range(len(self.servers)))}
+        g2 = self.center.graph          # same topology, new weights
         self.graph = g2
-        local_s = [srv.refresh_local(g2, self.partition)
-                   for srv in self.servers]
-        bl_s = self.center.rebuild(new_weights)
-        shortcut_s = [srv.install_shortcuts(
-            g2, self.partition, self.center.shortcuts_for(srv.district_id),
-            self.center.version) for srv in self.servers]
-        return {"local_refresh_s": local_s, "bl_rebuild_s": bl_s,
-                "shortcut_install_s": shortcut_s}
+        delta = rep["delta"]
+        dirty = set(int(i) for i in delta.dirty_districts)
+        stale = set(rep["stale_districts"])
+        local_s: dict[int, float] = {}
+        shortcut_s: dict[int, float] = {}
+        clean: list[int] = []
+        for i, srv in enumerate(self.servers):
+            if i in dirty:
+                local_s[i] = srv.refresh_local(g2, self.partition)
+            if i in dirty or i in stale or srv.augmented is None:
+                shortcut_s[i] = srv.install_shortcuts(
+                    g2, self.partition, self.center.shortcuts_for(i),
+                    self.center.version)
+            else:
+                # nothing this server depends on moved — keep serving
+                srv.augmented_version = self.center.version
+                clean.append(i)
+        return {"local_refresh_s": local_s,
+                "bl_rebuild_s": rep["seconds"],
+                "shortcut_install_s": shortcut_s,
+                "incremental": rep["incremental"],
+                "dirty_districts": sorted(dirty),
+                "stale_shortcut_districts": sorted(stale),
+                "clean_districts": clean}
 
     def query(self, s: int, t: int, client_district: int | None = None
               ) -> tuple[float, Rule]:
@@ -223,8 +274,12 @@ class EdgeSystem:
         ``size_bytes()`` footprint."""
         return self._current_engine()
 
-    def query_many(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
-        return self.query_batched(ss, ts)
+    def query_many(self, ss: np.ndarray, ts: np.ndarray,
+                   client_districts: np.ndarray | None = None,
+                   use_kernels: bool = True) -> np.ndarray:
+        return self.query_batched(ss, ts,
+                                  client_districts=client_districts,
+                                  use_kernels=use_kernels)
 
     def query_loop(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
         """Per-query Python reference path (parity + benchmark baseline)."""

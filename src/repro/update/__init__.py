@@ -1,0 +1,10 @@
+"""Dynamic traffic updates: delta classification, delta-scoped index
+repair (bit-for-bit equal to a full rebuild), and traffic-scenario
+generators for the simulator and benchmarks."""
+from .delta import WeightDelta, classify_delta
+from .incremental import IncrementalBuilder
+from .scenarios import (SCENARIOS, incident, regional_slowdown,
+                        rush_hour_corridor, scenario_weights,
+                        uniform_jitter)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,366 @@
+"""Delta-scoped index repair: turn a weight delta into the minimal set of
+builder-stage re-runs, bit-for-bit equal to a full rebuild.
+
+The hierarchical pipeline (``core/jax_builder.py``) factors through the
+district structure, so each stage has a natural repair scope:
+
+  stage A  re-run ONLY the dirty districts' multi-source sweeps (the
+           vmap lanes are independent, so a subset run is bitwise equal
+           to the same lanes of a full run);
+  overlay  district border blocks and cross-edge entries occupy disjoint
+           regions of the (q, q) matrix — patch the dirty districts'
+           blocks and rewrite the cross entries in place;
+  stage B  warm-started from the previous epoch's closure: when the
+           patched overlay is bitwise unchanged the cached closure is
+           reused outright; otherwise min-plus squaring restarts from
+           the patched overlay (required for bitwise equality with the
+           fixed-schedule closure) but exits at the first bitwise
+           fixpoint — squaring a fixpoint reproduces it exactly, so the
+           remaining scheduled squarings are provably no-ops.  The
+           previous epoch's convergence depth seeds the first fixpoint
+           check so a typical epoch pays one device→host comparison;
+  stage C  re-run only districts that are dirty OR whose borders' closure
+           rows moved; every vertex row belongs to exactly one district,
+           so the recomputed rows overwrite in place;
+  stage D  the prune of row v reads only row v itself plus the hub
+           (border) rows, so when NO border row of the unpruned table
+           moved, only the changed rows are re-pruned (against the
+           unchanged hub rows); if any hub row moved the prune is global
+           and stage D re-runs in full.
+
+Subset shapes are padded to power-of-two buckets (absorbing +inf / -1
+padding) so the jitted stages compile O(log m) variants instead of one
+per delta size.
+
+``IncrementalBuilder.apply_delta`` is the entry point; it guarantees the
+repaired ``BorderLabels`` is bitwise identical to
+``build_border_labels_jax`` on the new weights (property-tested in
+``tests/test_update.py``, asserted per-sweep-point in
+``benchmarks/bench_update.py``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.jax_builder import (BuildState, build_border_labels_stages,
+                                stage_a_intra_distances, stage_c_full_table,
+                                stage_d_prune)
+from ..core.labels import BorderLabels
+from ..core.partition import Partition
+from ..kernels.minplus.ops import minplus as mp_minplus
+from .delta import WeightDelta, classify_delta
+
+INF = np.float32(np.inf)
+
+
+def _pow2_bucket(k: int, cap: int) -> int:
+    """Smallest power of two ≥ k, clipped to cap (≥ 1)."""
+    return max(1, min(cap, 1 << max(0, math.ceil(math.log2(max(1, k))))))
+
+
+def _closure_init(overlay: np.ndarray) -> np.ndarray:
+    q = overlay.shape[0]
+    return np.minimum(overlay, np.where(np.eye(q, dtype=bool), 0.0,
+                                        INF)).astype(np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _square(d: jnp.ndarray, *, use_pallas: bool = False) -> jnp.ndarray:
+    """One min-plus squaring — the scan body of ``closure`` as a
+    standalone step, so the host-driven early-exit loop pays one jitted
+    dispatch per step instead of eager op-by-op execution."""
+    return mp_minplus(d, d, use_pallas=use_pallas)
+
+
+class IncrementalBuilder:
+    """Stateful builder: one full pipeline run caches every stage's
+    output (``core.jax_builder.BuildState``); subsequent weight deltas
+    repair the cache instead of rebuilding.
+
+    The cache is copy-on-write — ``state`` can be snapshotted and
+    restored wholesale (the benchmark re-times the same delta from the
+    same base state that way).
+    """
+
+    def __init__(self, *, prune: bool = True, use_pallas: bool = False):
+        self.prune = prune
+        self.use_pallas = use_pallas
+        self.state: BuildState | None = None
+        # topology/partition tokens the cache is valid for
+        self._indptr: np.ndarray | None = None
+        self._indices: np.ndarray | None = None
+        self._assignment: np.ndarray | None = None
+        # squaring count after which the previous closure hit its bitwise
+        # fixpoint (warm-start hint for the next epoch's stage B)
+        self._closure_depth = 0
+
+    # -- full pipeline -------------------------------------------------------
+
+    def build_full(self, g: Graph, part: Partition) -> BorderLabels:
+        labels, self.state = build_border_labels_stages(
+            g, part, prune=self.prune, use_pallas=self.use_pallas)
+        self._indptr, self._indices = g.indptr, g.indices
+        self._assignment = part.assignment
+        self._closure_depth = self._max_closure_steps()
+        return labels
+
+    def _cache_valid_for(self, g: Graph, part: Partition) -> bool:
+        return (self.state is not None and self._indptr is g.indptr
+                and self._indices is g.indices
+                and self._assignment is part.assignment)
+
+    def _max_closure_steps(self) -> int:
+        q = 0 if self.state is None else len(self.state.packed.border_ids)
+        return max(1, math.ceil(math.log2(max(2, q))))
+
+    # -- delta-scoped repair -------------------------------------------------
+
+    def apply_delta(self, g_new: Graph, part: Partition,
+                    delta: WeightDelta | None = None
+                    ) -> tuple[BorderLabels, dict]:
+        """Repair the cached index to ``g_new``'s weights.
+
+        Returns ``(labels, report)`` with the repaired ``BorderLabels``
+        bitwise equal to a full rebuild.  ``report['changed_rows']`` is
+        the (n,) mask of label-table rows that moved — the scope for
+        shortcut-cache invalidation and engine-swap accounting upstream.
+        Falls back to a full build (``report['incremental'] = False``)
+        when no cache matches the topology/partition.
+        """
+        t0 = time.perf_counter()
+        if not self._cache_valid_for(g_new, part):
+            labels = self.build_full(g_new, part)
+            return labels, {
+                "incremental": False, "seconds": time.perf_counter() - t0,
+                "changed_rows": np.ones(g_new.num_vertices, dtype=bool),
+                "dirty_districts": np.arange(part.num_districts,
+                                             dtype=np.int32),
+                "closure_reused": False, "repruned_rows": "full"}
+        st = self.state
+        if delta is None or delta.dirty_arcs.shape != st.weights.shape or \
+                not np.array_equal(
+                    st.weights != g_new.weights, delta.dirty_arcs):
+            # the caller's delta was classified against a different base —
+            # re-classify against the cache's own weight snapshot
+            base = Graph(g_new.indptr, g_new.indices, st.weights)
+            delta = classify_delta(base, part, g_new.weights)
+        n = g_new.num_vertices
+        if delta.is_empty:
+            self.state = replace(st, weights=g_new.weights)
+            return st.labels(), {
+                "incremental": True, "seconds": time.perf_counter() - t0,
+                "changed_rows": np.zeros(n, dtype=bool),
+                "dirty_districts": delta.dirty_districts,
+                "closure_reused": True, "repruned_rows": 0}
+        packed = st.packed
+        q = len(packed.border_ids)
+        if q == 0:
+            # single district, empty B: nothing in the index depends on
+            # weights (the table is (n, 0))
+            self.state = replace(st, weights=g_new.weights)
+            return st.labels(), {
+                "incremental": True, "seconds": time.perf_counter() - t0,
+                "changed_rows": np.zeros(n, dtype=bool),
+                "dirty_districts": delta.dirty_districts,
+                "closure_reused": True, "repruned_rows": 0}
+
+        if len(delta.dirty_districts) == packed.num_districts:
+            # every district is dirty (a scattered, jitter-like delta):
+            # stage A — the dominant cost — re-runs in full either way,
+            # so the scoped path has nothing to save; run the plain full
+            # pipeline and keep only the honest changed-rows accounting
+            old_table = st.table
+            labels = self.build_full(g_new, part)
+            return labels, {
+                "incremental": False,
+                "seconds": time.perf_counter() - t0,
+                "changed_rows": (labels.table != old_table).any(axis=1),
+                "dirty_districts": delta.dirty_districts,
+                "closure_reused": False, "repruned_rows": "full"}
+
+        # stage A on the dirty districts only
+        dirty = delta.dirty_districts
+        intra = st.intra
+        if len(dirty):
+            intra = intra.copy()
+            intra[dirty] = self._stage_a_subset(g_new, packed, dirty)
+
+        # overlay patch: dirty district blocks + cross entries (disjoint
+        # regions of the (q, q) matrix — see delta.py)
+        overlay = self._patch_overlay(g_new, part, packed, intra, dirty,
+                                      delta, st.overlay)
+
+        # stage B: warm-started closure
+        closure, closure_reused = self._closure_incremental(overlay,
+                                                            st.overlay,
+                                                            st.closure)
+
+        # stage C scoped to districts whose inputs moved: dirty ones, plus
+        # any district one of whose borders' closure rows changed
+        changed_slot_rows = (closure != st.closure).any(axis=1)
+        affected = set(int(i) for i in dirty)
+        for i in range(packed.num_districts):
+            bslots = packed.border_slot[i]
+            bslots = bslots[bslots >= 0]
+            if len(bslots) and changed_slot_rows[bslots].any():
+                affected.add(i)
+        affected = np.array(sorted(affected), dtype=np.int64)
+        unpruned = st.unpruned
+        if len(affected):
+            unpruned = unpruned.copy()
+            rows = np.concatenate(
+                [packed.vertex_ids[i][packed.vertex_ids[i] >= 0]
+                 for i in affected])
+            unpruned[rows] = self._stage_c_subset(intra, packed, closure,
+                                                  affected, n)[rows]
+
+        # stage D scoped to the rows whose unpruned values moved — global
+        # when any hub (border) row moved, since every row's prune reads
+        # the hub rows
+        table, repruned = self._stage_d_scoped(unpruned, st, packed)
+
+        changed_rows = (table != st.table).any(axis=1)
+        self.state = BuildState(packed, intra, overlay, closure, unpruned,
+                                table, st.prune_order, g_new.weights)
+        return BorderLabels(packed.border_ids, table), {
+            "incremental": True, "seconds": time.perf_counter() - t0,
+            "changed_rows": changed_rows,
+            "dirty_districts": dirty,
+            "affected_districts": affected.astype(np.int32),
+            "closure_reused": closure_reused,
+            "repruned_rows": repruned}
+
+    # -- stage helpers -------------------------------------------------------
+
+    def _stage_a_subset(self, g_new: Graph, packed, dirty: np.ndarray
+                        ) -> np.ndarray:
+        """Dirty districts' stage A, padded to a power-of-two lane count
+        with absorbing entries (+inf adjacency / -1 border rows).  The
+        dense adjacency blocks are rebuilt straight into the subset
+        buffer — O(dirty districts) work, never O(m)."""
+        md = _pow2_bucket(len(dirty), packed.num_districts)
+        sub_adj = np.full((md, packed.kmax, packed.kmax), INF,
+                          dtype=np.float32)
+        sub_pos = -np.ones((md, packed.bmax), dtype=np.int64)
+        for j, i in enumerate(dirty):
+            verts = packed.vertex_ids[i][packed.vertex_ids[i] >= 0]
+            k = len(verts)
+            sub_adj[j, :k, :k] = g_new.dense_adjacency(verts)
+        sub_pos[:len(dirty)] = packed.border_pos[dirty]
+        out = stage_a_intra_distances(jnp.asarray(sub_adj),
+                                      jnp.asarray(sub_pos),
+                                      iters=packed.kmax,
+                                      use_pallas=self.use_pallas)
+        return np.asarray(out)[:len(dirty)]
+
+    @staticmethod
+    def _patch_overlay(g_new: Graph, part: Partition, packed,
+                       intra: np.ndarray, dirty: np.ndarray,
+                       delta: WeightDelta, cached: np.ndarray) -> np.ndarray:
+        """Rewrite exactly the overlay entries the delta can move: the
+        dirty districts' border blocks from their fresh stage-A rows, and
+        (when a cross edge moved) every cross-edge entry.  Both rewrites
+        reproduce the full `_overlay_from_intra` values for their region,
+        so the patched matrix is bitwise equal to a from-scratch one."""
+        w = cached.copy()
+        for i in dirty:
+            bslots = packed.border_slot[i]
+            bpos = packed.border_pos[i]
+            valid = bslots >= 0
+            bs = bslots[valid]
+            bp = bpos[valid]
+            if len(bs) == 0:
+                continue
+            block = intra[i][valid][:, bp]
+            init = np.where(np.equal.outer(bs, bs), 0.0, INF) \
+                .astype(np.float32)
+            w[np.ix_(bs, bs)] = np.minimum(init, block)
+        if delta.cross_dirty:
+            n = g_new.num_vertices
+            q = len(packed.border_ids)
+            slot = -np.ones(n, dtype=np.int64)
+            slot[packed.border_ids] = np.arange(q)
+            src = g_new.arc_sources()
+            cross = part.assignment[src] != part.assignment[g_new.indices]
+            su, sv = slot[src[cross]], slot[g_new.indices[cross]]
+            w[su, sv] = INF
+            np.minimum.at(w, (su, sv), g_new.weights[cross])
+        return w
+
+    def _closure_incremental(self, overlay: np.ndarray,
+                             cached_overlay: np.ndarray,
+                             cached_closure: np.ndarray
+                             ) -> tuple[np.ndarray, bool]:
+        """Stage B warm-started from the previous closure (see module
+        docstring for the bitwise-equality argument)."""
+        if np.array_equal(overlay, cached_overlay):
+            return cached_closure, True
+        steps = self._max_closure_steps()
+        check_from = max(0, min(self._closure_depth, steps) - 1)
+        d = jnp.asarray(_closure_init(overlay))
+        host = None
+        for s in range(steps):
+            nd = _square(d, use_pallas=self.use_pallas)
+            if s >= check_from:
+                nh = np.asarray(nd)
+                if host is None:
+                    host = np.asarray(d)
+                if np.array_equal(nh, host):
+                    self._closure_depth = s
+                    return host, False
+                host = nh
+            d = nd
+        self._closure_depth = steps
+        return np.asarray(d) if host is None else host, False
+
+    def _stage_c_subset(self, intra: np.ndarray, packed,
+                        closure: np.ndarray, affected: np.ndarray,
+                        n: int) -> np.ndarray:
+        md = _pow2_bucket(len(affected), packed.num_districts)
+        sub_intra = np.full((md,) + intra.shape[1:], INF, dtype=np.float32)
+        sub_slot = -np.ones((md, packed.bmax), dtype=np.int64)
+        sub_ids = -np.ones((md, packed.kmax), dtype=np.int32)
+        sub_intra[:len(affected)] = intra[affected]
+        sub_slot[:len(affected)] = packed.border_slot[affected]
+        sub_ids[:len(affected)] = packed.vertex_ids[affected]
+        out = stage_c_full_table(jnp.asarray(sub_intra),
+                                 jnp.asarray(sub_slot),
+                                 jnp.asarray(closure),
+                                 jnp.asarray(sub_ids), n,
+                                 use_pallas=self.use_pallas)
+        return np.asarray(out)
+
+    def _stage_d_scoped(self, unpruned: np.ndarray, st: BuildState,
+                        packed) -> tuple[np.ndarray, int | str]:
+        if not self.prune:
+            return unpruned, 0
+        changed = (unpruned != st.unpruned).any(axis=1)
+        if not changed.any():
+            return st.table, 0
+        border_ids = packed.border_ids
+        if changed[border_ids].any():
+            # a hub row moved: every row's λ estimates read it → global
+            table = stage_d_prune(jnp.asarray(unpruned),
+                                  jnp.asarray(border_ids),
+                                  jnp.asarray(st.prune_order))
+            return np.asarray(table), "full"
+        # hub rows intact: re-prune only the changed rows against them
+        rowsel = np.union1d(np.nonzero(changed)[0], border_ids)
+        rp = _pow2_bucket(len(rowsel), unpruned.shape[0])
+        sub = np.full((rp, unpruned.shape[1]), INF, dtype=np.float32)
+        sub[:len(rowsel)] = unpruned[rowsel]
+        border_rows_sub = np.searchsorted(rowsel, border_ids)
+        out = stage_d_prune(jnp.asarray(sub),
+                            jnp.asarray(border_rows_sub),
+                            jnp.asarray(st.prune_order))
+        table = st.table.copy()
+        table[rowsel] = np.asarray(out)[:len(rowsel)]
+        return table, int(changed.sum())
