@@ -1,13 +1,15 @@
 """End-to-end edge-serving driver (the paper's deployment, §4–§5).
 
-Deploys a computing center + edge servers over a road network, walks
-through the three serving-engine layouts (replicated, district-sharded,
-B-sharded — see README "Choosing an engine" and docs/ARCHITECTURE.md),
-then drives an hour of simulated traffic: batched client queries
-arriving continuously while the road weights update every epoch. Every
-answer is served exactly (Theorems 1–3); the latency table compares the
-edge deployment against the centralized baseline on measured rebuild
-costs.
+Deploys a computing center + edge servers over a road network, serves
+batched client queries through the ``DistanceService`` request plane
+(walking the three engine layouts — replicated, district-sharded,
+B-sharded — and the three rebuild-window policies), then drives an hour
+of simulated traffic: batched client queries arriving continuously
+while the road weights update every epoch.  Under the default
+``install_now``/``certify_or_wait`` policies every answer is served
+exactly (Theorems 1–3); the latency table compares the edge deployment
+against the centralized baseline on measured rebuild costs, plus the
+``stale_ok`` bounded-staleness variant.
 
     PYTHONPATH=src python examples/edge_serving.py [--minutes 10]
 
@@ -24,7 +26,7 @@ from repro.core import (dijkstra, grid_partition, grid_road_network,
 from repro.edge import (BatchPolicy, EdgeSystem, LatencyModel, Topology,
                         UpdateSchedule, make_trace, simulate_centralized,
                         simulate_edge)
-from repro.serve import DistanceBatcher
+from repro.serve import STALE_OK, ServingPolicy
 
 
 def main() -> None:
@@ -39,41 +41,43 @@ def main() -> None:
     print(f"deploying edge system: |V|={g.num_vertices:,}, "
           f"{part.num_districts} districts/edge servers")
     sys_ = EdgeSystem.deploy(g, part)
+    service = sys_.service()
 
     # -- live serving with a traffic update mid-stream -------------------
     rng = np.random.default_rng(0)
     ss = rng.integers(0, g.num_vertices, size=2000)
     ts = rng.integers(0, g.num_vertices, size=2000)
-    d0 = sys_.query_batched(ss, ts)        # warm the engine + jit
+    d0 = service.submit(ss, ts).distances  # warm the engine + jit
     t0 = time.perf_counter()
-    d0 = sys_.query_batched(ss, ts)
+    batch = service.submit(ss, ts)
     batched_ms = (time.perf_counter() - t0) * 1e3
+    d0 = batch.distances
     t0 = time.perf_counter()
     sys_.query_loop(ss[:200], ts[:200])
     loop_ms = (time.perf_counter() - t0) / 200 * 2000 * 1e3
-    print(f"served 2k queries in {batched_ms:.1f} ms batched "
-          f"(single-query loop would take ~{loop_ms:.0f} ms); "
-          f"routing stats: {sys_.stats}")
+    print(f"served 2k queries in {batched_ms:.1f} ms batched, plane "
+          f"dispatch {batch.latency_s * 1e3:.1f} ms (single-query loop "
+          f"would take ~{loop_ms:.0f} ms); routing stats: {service.stats}")
 
-    # -- choosing an engine: the three layouts answer identically --------
+    # -- choosing an engine: ServingPolicy placements answer identically -
     import jax
     print(f"\nengine layouts on {len(jax.devices())} device(s) "
           f"(README 'Choosing an engine'):")
-    for label, prefer, border in (("replicated", False, None),
-                                  ("district-sharded", True, False),
-                                  ("B-sharded", True, True)):
-        sys_.prefer_sharded, sys_.shard_border = prefer, border
-        np.testing.assert_array_equal(sys_.query_batched(ss, ts), d0)
-        eng = sys_.current_engine()
+    for label, policy in (
+            ("replicated", ServingPolicy(engine="replicated")),
+            ("district-sharded", ServingPolicy(engine="sharded",
+                                               shard_border=False)),
+            ("B-sharded", ServingPolicy(engine="sharded",
+                                        shard_border=True))):
+        svc = sys_.service(policy)
+        np.testing.assert_array_equal(svc.submit(ss, ts).distances, d0)
+        eng = svc.plan(ss, ts).plane
         print(f"  {label:18s} {type(eng).__name__:22s} "
               f"resident {eng.size_bytes()/1e6:6.2f} MB/device")
-    sys_.prefer_sharded = sys_.shard_border = None   # back to auto-pick
-    sys_.query_batched(ss[:1], ts[:1])               # rebuild auto engine
 
     # the micro-batching front door: per-request latency accounting
-    # pad=False: query_batched already pads internally, and dummy pairs
-    # would otherwise show up in sys_.stats
-    batcher = DistanceBatcher(sys_.query_batched, batch_size=512, pad=False)
+    # (padding dummies are masked out of the service counters)
+    batcher = service.batcher(batch_size=512)
     batcher.submit_pairs(list(zip(ss.tolist(), ts.tolist())))
     batcher.run()
     st = batcher.latency_stats()
@@ -89,17 +93,18 @@ def main() -> None:
     print(f"  edge: local refresh {max(timings['local_refresh_s'])*1e3:.0f}"
           f" ms (parallel), BL rebuild+push {bl_ms:.0f} ms")
     t0 = time.perf_counter()
-    full_pll_s = None
     full = pll(sys_.graph)
     full_pll_s = time.perf_counter() - t0
     print(f"  centralized full re-index (PLL): {full_pll_s*1e3:.0f} ms")
 
-    d1 = sys_.query_many(ss, ts)
+    post = sys_.service().submit(ss, ts)
+    assert post.exact.all()
     chk = rng.integers(0, len(ss), size=5)
     for i in chk:
         ref = dijkstra(sys_.graph, int(ss[i]))[int(ts[i])]
-        assert abs(d1[i] - ref) < 1e-3 * max(1.0, ref)
-    print("post-update answers verified exact\n")
+        assert abs(post.distances[i] - ref) < 1e-3 * max(1.0, ref)
+    print(f"post-update answers verified exact "
+          f"(index version {post.index_version})\n")
 
     # -- latency simulation over the full span ---------------------------
     horizon = args.minutes * 60_000.0
@@ -111,30 +116,27 @@ def main() -> None:
                               rebuild_ms_edge_local=max(
                                   timings["local_refresh_s"]) * 1e3)
 
-    cert_cache: dict[tuple[int, int], bool] = {}
-
-    def certified(s, t):
-        key = (s, t)
-        if key not in cert_cache:
-            srv = sys_.servers[int(part.assignment[s])]
-            _, ok = srv.answer_certified(s, t)
-            cert_cache[key] = ok
-        return cert_cache[key]
-
+    certified = sys_.service().certifier()
     central = simulate_centralized(trace, topo, schedule)
     edge = simulate_edge(trace, topo, schedule, part.assignment, certified,
                          part.num_districts)
-    edge_batched = simulate_edge(trace, topo, schedule, part.assignment,
-                                 certified, part.num_districts,
-                                 batch=BatchPolicy(batch_size=64,
-                                                   window_ms=2.0))
+    edge_batched = simulate_edge(
+        trace, topo, schedule, part.assignment, certified,
+        part.num_districts,
+        policy=ServingPolicy(batch=BatchPolicy(batch_size=64,
+                                               window_ms=2.0)))
+    edge_stale = simulate_edge(
+        trace, topo, schedule, part.assignment, certified,
+        part.num_districts, policy=ServingPolicy(rebuild=STALE_OK))
     print(f"{'':16}{'mean':>9}{'p50':>9}{'p95':>9}{'p99':>9}"
-          f"{'waited':>9}{'LB hit':>9}")
+          f"{'waited':>9}{'LB hit':>9}{'stale':>9}")
     for name, r in (("centralized", central), ("edge (ours)", edge),
-                    ("edge batched", edge_batched)):
+                    ("edge batched", edge_batched),
+                    ("edge stale_ok", edge_stale)):
         print(f"{name:16}{r.mean_ms:8.1f}ms{r.p50_ms:8.1f}ms"
               f"{r.p95_ms:8.1f}ms{r.p99_ms:8.1f}ms"
-              f"{r.waited_frac:9.3f}{r.lb_certified_frac:9.3f}")
+              f"{r.waited_frac:9.3f}{r.lb_certified_frac:9.3f}"
+              f"{r.stale_frac:9.3f}")
     print(f"\nedge reduces mean user latency "
           f"{central.mean_ms/edge.mean_ms:.1f}x "
           f"(p95 {central.p95_ms/edge.p95_ms:.1f}x)")

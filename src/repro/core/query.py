@@ -79,8 +79,11 @@ def bucket_by_rule(assignment: np.ndarray, ss: np.ndarray, ts: np.ndarray,
     when the client submitted from a district other than s's)."""
     ds = assignment[ss].astype(np.int32)
     dt = assignment[ts].astype(np.int32)
-    client = ds if client_districts is None \
-        else np.asarray(client_districts, dtype=np.int32)
+    if client_districts is None:        # client == ds: rule 2 can't fire
+        rules = np.where(ds != dt, np.int32(Rule.CROSS),
+                         np.int32(Rule.LOCAL))
+        return ds, dt, rules
+    client = np.asarray(client_districts, dtype=np.int32)
     rules = np.where(ds != dt, np.int32(Rule.CROSS),
                      np.where(ds == client, np.int32(Rule.LOCAL),
                               np.int32(Rule.FORWARD_EDGE)))
@@ -92,10 +95,10 @@ def query_batch(bl: BorderLabels, locals_: list[LocalIndex],
                 use_kernels: bool = False) -> np.ndarray:
     """Batched routing + answering: bucket by rule in one pass, answer
     rule-1/2 per district, rule-3 via B, and consolidate with a single
-    scatter per bucket. Host-NumPy reference by default — the serving hot
-    path is ``EdgeSystem.query_batched`` (single-dispatch engine over the
-    label_join kernels); ``use_kernels=True`` routes the per-bucket joins
-    through those kernels too."""
+    scatter per bucket. Host-NumPy reference by default — the serving
+    hot path is ``repro.serve.DistanceService.submit`` (single-dispatch
+    engine plane over the label_join kernels); ``use_kernels=True``
+    routes the per-bucket joins through those kernels too."""
     ss = np.asarray(ss, dtype=np.int64)
     ts = np.asarray(ts, dtype=np.int64)
     out = np.full(len(ss), INF, dtype=np.float32)

@@ -112,6 +112,9 @@ class BatchedQueryEngine:
         return np.asarray(out)[:qn]
 
     __call__ = query
+    # QueryPlane conformance: the engine snapshot is the steady-state
+    # execution plane of serve.service.DistanceService
+    execute = query
 
 
 class ShardedBatchedEngine:
@@ -190,3 +193,5 @@ class ShardedBatchedEngine:
         return np.asarray(out)[:qn]
 
     __call__ = query
+    # QueryPlane conformance (see BatchedQueryEngine)
+    execute = query

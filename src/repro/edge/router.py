@@ -1,33 +1,46 @@
-"""System facade: center + all edge servers + §4.2 routing, version-aware.
+"""System facade: center + all edge servers + engine snapshots,
+version-aware.
 
 ``EdgeSystem`` is the functional model of the deployment (the discrete-
 event simulator adds time on top; the sharded_oracle maps the same logic
-onto a device mesh).
+onto a device mesh).  The request plane — §4.2 routing, typed results,
+rebuild-window policy — lives in ``repro.serve.service``; get a front
+door with ``EdgeSystem.service()``.  The historical entry points
+``query`` / ``query_batched`` / ``query_many`` remain as deprecated
+shims over that service (same signatures, same answers, same
+``stats`` side effects).
 
-Paper map: ``query``/``query_batched`` implement the §4.2 query rules
-(rule 1 same-district local, rule 2 same-district via another client's
-server, rule 3 cross-district through the border table B at the
-computing center); during a rebuild window (center pushed a new index
-version, shortcuts not yet installed) answers are served from the stale
-L_i under the Theorem-3 rebuild-window certificate (λ ≤ Local Bound ⇒
-still exact), and the uncertified residue waits for the shortcut push.
-``_current_engine`` snapshots one index version into a batched serving
-engine and swaps it — including the device-resident B shards — whenever
-the center's version moves (see docs/ARCHITECTURE.md).
+Paper map: the service planes implement the §4.2 query rules (rule 1
+same-district local, rule 2 same-district via another client's server,
+rule 3 cross-district through the border table B at the computing
+center); during a rebuild window (center pushed a new index version,
+shortcuts not yet installed) answers are served from the stale L_i under
+the Theorem-3 rebuild-window certificate (λ ≤ Local Bound ⇒ still
+exact), and the uncertified residue is resolved per the policy's
+rebuild mode.  ``_current_engine`` snapshots one index version into a
+batched serving engine and swaps it — including the device-resident B
+shards — whenever the center's version moves (see
+docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
 from ..core.graph import Graph
 from ..core.partition import Partition
-from ..core.query import Rule, bucket_by_rule, route
+from ..core.query import Rule
 from .center import ComputingCenter
 from .server import EdgeServer
 
-INF = np.float32(np.inf)
+if TYPE_CHECKING:                                   # pragma: no cover
+    from ..serve.service import DistanceService, ServingPolicy
+
+# sentinel: "use the EdgeSystem attribute" (None already means auto-pick)
+_SELF = object()
 
 # auto-pick threshold for row-sharding the border table B: replicating B
 # costs n·q·4 bytes per device and zero collectives, so it stays
@@ -133,98 +146,55 @@ class EdgeSystem:
                 "stale_shortcut_districts": sorted(stale),
                 "clean_districts": clean}
 
+    def service(self, policy: "ServingPolicy | None" = None
+                ) -> "DistanceService":
+        """A typed request-plane front door over this system (see
+        ``repro.serve.service``).  Each call returns a fresh service
+        with its own counters; the engine snapshot underneath is shared
+        through ``_current_engine``'s cache, so services are cheap."""
+        from ..serve.service import DistanceService
+        return DistanceService(self, policy)
+
+    def _merge_stats(self, counters: dict) -> None:
+        for k, v in counters.items():
+            self.stats[k] += v
+
     def query(self, s: int, t: int, client_district: int | None = None
               ) -> tuple[float, Rule]:
-        ds = int(self.partition.assignment[s])
-        dt = int(self.partition.assignment[t])
-        client = ds if client_district is None else client_district
-        rule = route(ds, dt, client)
-        if rule == Rule.CROSS:
-            self.stats["rule3"] += 1
-            return float(self.center.answer_cross(s, t)), rule
-        server = self.servers[ds]
-        self.stats["rule1" if rule == Rule.LOCAL else "rule2"] += 1
-        exact = server.answer_exact(s, t)
-        if exact is not None:
-            return exact, rule
-        # shortcuts not installed (rebuild window): Theorem-3 fallback
-        self.stats["lb_fallback_attempts"] += 1
-        lam, ok = server.answer_certified(s, t)
-        if ok:
-            self.stats["lb_certified"] += 1
-            return lam, rule
-        # uncertified: the query must wait for the shortcut push (the
-        # simulator charges the wait; functionally we install now)
-        server.install_shortcuts(self.graph, self.partition,
-                                 self.center.shortcuts_for(ds),
-                                 self.center.version)
-        exact = server.answer_exact(s, t)
-        assert exact is not None
-        return exact, rule
+        """Deprecated shim — use ``service().query(s, t)`` (returns a
+        typed ``QueryResult`` instead of a bare tuple)."""
+        warnings.warn(
+            "EdgeSystem.query is deprecated; use "
+            "EdgeSystem.service().query(s, t) instead",
+            DeprecationWarning, stacklevel=2)
+        svc = self.service()
+        res = svc.query(int(s), int(t), client_district)
+        self._merge_stats(svc.stats)
+        return res.distance, res.rule
 
     def query_batched(self, ss: np.ndarray, ts: np.ndarray,
                       client_districts: np.ndarray | None = None,
                       use_kernels: bool = True) -> np.ndarray:
-        """Vectorized serving path: bucket the batch by §4.2 rule in one
-        NumPy pass, answer each bucket through the label_join kernels
-        (rule-3 via the dense join over B, rule-1/2 via the sparse join on
-        L_i⁺, the Theorem-3 fused λ+LB certificate during rebuild
-        windows), and consolidate with one scatter per bucket.
+        """Deprecated shim — use ``service().submit(ss, ts).distances``
+        (``ServingPolicy(use_kernels=...)`` replaces the keyword).  Same
+        answers, same ``install_now`` side effects, same ``stats``
+        counting as the historical in-place implementation."""
+        warnings.warn(
+            "EdgeSystem.query_batched is deprecated; use "
+            "EdgeSystem.service().submit(ss, ts).distances instead",
+            DeprecationWarning, stacklevel=2)
+        return self._query_batched_via_service(ss, ts, client_districts,
+                                               use_kernels)
 
-        Same answers and side effects as the per-query ``query`` loop —
-        uncertified rebuild-window queries trigger the shortcut install
-        exactly as the scalar path does. In the steady state (every
-        server's L_i⁺ current) the whole batch goes through the packed
-        single-dispatch BatchedQueryEngine instead of per-bucket calls."""
-        ss = np.asarray(ss, dtype=np.int64)
-        ts = np.asarray(ts, dtype=np.int64)
-        out = np.full(len(ss), INF, dtype=np.float32)
-        ds, _, rules = bucket_by_rule(self.partition.assignment, ss, ts,
-                                      client_districts)
-        engine = self._current_engine() if use_kernels else None
-        if engine is not None:
-            self.stats["rule3"] += int((rules == np.int32(Rule.CROSS)).sum())
-            self.stats["rule1"] += int((rules == np.int32(Rule.LOCAL)).sum())
-            self.stats["rule2"] += int(
-                (rules == np.int32(Rule.FORWARD_EDGE)).sum())
-            return engine.query(ss, ts)
-        cross_idx = np.nonzero(rules == np.int32(Rule.CROSS))[0]
-        if len(cross_idx):
-            self.stats["rule3"] += len(cross_idx)
-            out[cross_idx] = self.center.answer_cross_many(
-                ss[cross_idx], ts[cross_idx], use_kernels=use_kernels)
-        same = rules != np.int32(Rule.CROSS)
-        for i, server in enumerate(self.servers):
-            sel = np.nonzero(same & (ds == np.int32(i)))[0]
-            if not len(sel):
-                continue
-            self.stats["rule1"] += int(
-                (rules[sel] == np.int32(Rule.LOCAL)).sum())
-            self.stats["rule2"] += int(
-                (rules[sel] == np.int32(Rule.FORWARD_EDGE)).sum())
-            exact = server.answer_exact_batch(ss[sel], ts[sel],
-                                              use_kernels=use_kernels)
-            if exact is not None:
-                out[sel] = exact
-                continue
-            # rebuild window: fused Theorem-3 certificate on plain L_i
-            self.stats["lb_fallback_attempts"] += len(sel)
-            lam, cert = server.answer_certified_batch(
-                ss[sel], ts[sel], use_kernels=use_kernels)
-            self.stats["lb_certified"] += int(cert.sum())
-            out[sel[cert]] = lam[cert]
-            rest = sel[~cert]
-            if len(rest):
-                # uncertified residue waits for the shortcut push (the
-                # simulator charges the wait; functionally install now)
-                server.install_shortcuts(self.graph, self.partition,
-                                         self.center.shortcuts_for(i),
-                                         self.center.version)
-                out[rest] = server.answer_exact_batch(
-                    ss[rest], ts[rest], use_kernels=use_kernels)
+    def _query_batched_via_service(self, ss, ts, client_districts=None,
+                                   use_kernels=True) -> np.ndarray:
+        from ..serve.service import ServingPolicy
+        svc = self.service(ServingPolicy(use_kernels=use_kernels))
+        out = svc.submit(ss, ts, client_districts=client_districts).distances
+        self._merge_stats(svc.stats)
         return out
 
-    def _current_engine(self):
+    def _current_engine(self, prefer_sharded=_SELF, shard_border=_SELF):
         """Engine snapshot for the current index version, or None while
         any district's shortcuts are stale (rebuild window). Single-device
         backends get the replicated ``BatchedQueryEngine``; multi-device
@@ -232,19 +202,26 @@ class EdgeSystem:
         (``ShardedBatchedEngine``) so the table scales past one device's
         memory, and within the sharded engine B itself is row-sharded
         once its replicated footprint crosses SHARD_BORDER_AUTO_BYTES.
-        ``prefer_sharded`` / ``shard_border`` override the auto choices."""
+        ``prefer_sharded`` / ``shard_border`` override the auto choices
+        (arguments take precedence over the instance attributes; the
+        request plane passes its ``ServingPolicy`` placement through
+        them)."""
+        if prefer_sharded is _SELF:
+            prefer_sharded = self.prefer_sharded
+        if shard_border is _SELF:
+            shard_border = self.shard_border
         if any(srv.augmented is None
                or srv.augmented_version != self.center.version
                for srv in self.servers):
             return None
         import jax
         num_devices = len(jax.devices())
-        sharded = (num_devices > 1 if self.prefer_sharded is None
-                   else self.prefer_sharded)
+        sharded = (num_devices > 1 if prefer_sharded is None
+                   else prefer_sharded)
         btable = self.center.border_labels.table
         shard_border = sharded and (
             btable.size * 4 > SHARD_BORDER_AUTO_BYTES
-            if self.shard_border is None else self.shard_border)
+            if shard_border is None else shard_border)
         key = (self.center.version,
                tuple(srv.augmented_version for srv in self.servers),
                sharded, shard_border, num_devices)
@@ -277,11 +254,20 @@ class EdgeSystem:
     def query_many(self, ss: np.ndarray, ts: np.ndarray,
                    client_districts: np.ndarray | None = None,
                    use_kernels: bool = True) -> np.ndarray:
-        return self.query_batched(ss, ts,
-                                  client_districts=client_districts,
-                                  use_kernels=use_kernels)
+        """Deprecated alias of ``query_batched`` — use
+        ``service().submit(ss, ts).distances``."""
+        warnings.warn(
+            "EdgeSystem.query_many is deprecated; use "
+            "EdgeSystem.service().submit(ss, ts).distances instead",
+            DeprecationWarning, stacklevel=2)
+        return self._query_batched_via_service(ss, ts, client_districts,
+                                               use_kernels)
 
     def query_loop(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
-        """Per-query Python reference path (parity + benchmark baseline)."""
-        return np.array([self.query(int(s), int(t))[0]
-                         for s, t in zip(ss, ts)], dtype=np.float32)
+        """Per-query Python reference path (parity + benchmark baseline);
+        the ``ScalarLoopPlane`` of the request plane."""
+        svc = self.service()
+        out = svc.scalar_plane().execute(np.asarray(ss, dtype=np.int64),
+                                         np.asarray(ts, dtype=np.int64))
+        self._merge_stats(svc.stats)
+        return out

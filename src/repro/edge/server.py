@@ -10,7 +10,7 @@ queued, in the paper's strictest reading — the simulator models both).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -29,6 +29,9 @@ class EdgeServer:
     augmented: LocalIndex | None = None   # L_i⁺ (needs center shortcuts)
     augmented_version: int = -1
     last_build_seconds: float = 0.0
+    # read-only L_i⁺ preview per index version (certify_or_wait queries
+    # answer from the post-push index without installing it)
+    _peek: tuple[int, LocalIndex] | None = field(default=None, repr=False)
 
     @classmethod
     def bootstrap(cls, g: Graph, part: Partition,
@@ -44,24 +47,48 @@ class EdgeServer:
         t0 = time.perf_counter()
         self.plain = _build_plain(g, part, self.district_id)
         self.augmented = None          # shortcuts are stale now
+        self._peek = None              # previews were built on the old L_i
         self.last_build_seconds = time.perf_counter() - t0
         return self.last_build_seconds
+
+    def _build_augmented(self, g: Graph,
+                         shortcut_matrix: np.ndarray) -> LocalIndex:
+        """L_i⁺ from the current plain L_i + the center's shortcuts."""
+        extra = shortcut_edges(self.plain.border_locals, shortcut_matrix)
+        labels, verts = pll_subgraph(g, self.plain.vertices,
+                                     extra_edges=extra)
+        return LocalIndex(self.district_id, verts,
+                          self.plain.border_locals, labels, augmented=True)
 
     def install_shortcuts(self, g: Graph, part: Partition,
                           shortcut_matrix: np.ndarray, version: int
                           ) -> float:
-        """Fold the center's shortcuts into L_i⁺ (Theorem 2 activation)."""
+        """Fold the center's shortcuts into L_i⁺ (Theorem 2 activation).
+        If a ``certify_or_wait`` query already built this version's
+        preview (``peek_augmented``), the push just promotes it —
+        the expensive pll_subgraph run is not repeated."""
         t0 = time.perf_counter()
-        vertices = self.plain.vertices
-        extra = shortcut_edges(self.plain.border_locals, shortcut_matrix)
-        labels, verts = pll_subgraph(g, vertices, extra_edges=extra)
-        self.augmented = LocalIndex(self.district_id, verts,
-                                    self.plain.border_locals, labels,
-                                    augmented=True)
+        if self._peek is not None and self._peek[0] == version:
+            self.augmented = self._peek[1]
+        else:
+            self.augmented = self._build_augmented(g, shortcut_matrix)
+        self._peek = None               # promoted (or superseded)
         self.augmented_version = version
         dt = time.perf_counter() - t0
         self.last_build_seconds = dt
         return dt
+
+    def peek_augmented(self, g: Graph, part: Partition,
+                       shortcut_matrix: np.ndarray,
+                       version: int) -> LocalIndex:
+        """The L_i⁺ that ``install_shortcuts`` WOULD produce for
+        ``version``, without installing it: the serving state (and hence
+        the rebuild window) is untouched.  This is how ``certify_or_wait``
+        answers the uncertified residue — the query 'waits for the push'
+        and reads the post-push index.  Cached per version."""
+        if self._peek is None or self._peek[0] != version:
+            self._peek = (version, self._build_augmented(g, shortcut_matrix))
+        return self._peek[1]
 
     # -- query paths --------------------------------------------------------
 

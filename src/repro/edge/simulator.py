@@ -20,12 +20,16 @@ milliseconds; the trace is deterministic given a seed.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
 from ..core.graph import Graph
 from ..core.partition import Partition
 from .topology import Topology
+
+if TYPE_CHECKING:                                   # pragma: no cover
+    from ..serve.service import ServingPolicy
 
 INF = float("inf")
 
@@ -46,15 +50,17 @@ class SimResult:
     p99_ms: float
     lb_certified_frac: float = 0.0
     waited_frac: float = 0.0
+    stale_frac: float = 0.0     # served stale under the stale_ok policy
 
     @classmethod
-    def from_latencies(cls, lat: np.ndarray, lb_frac=0.0, waited=0.0):
+    def from_latencies(cls, lat: np.ndarray, lb_frac=0.0, waited=0.0,
+                       stale=0.0):
         if len(lat) == 0:       # empty trace: zeros, not NaN + warnings
             return cls(np.asarray(lat, dtype=np.float64), 0.0, 0.0, 0.0,
-                       0.0, lb_frac, waited)
+                       0.0, lb_frac, waited, stale)
         return cls(lat, float(lat.mean()), float(np.percentile(lat, 50)),
                    float(np.percentile(lat, 95)),
-                   float(np.percentile(lat, 99)), lb_frac, waited)
+                   float(np.percentile(lat, 99)), lb_frac, waited, stale)
 
     def row(self, name: str) -> dict:
         return {"system": name, "mean_ms": round(self.mean_ms, 3),
@@ -62,7 +68,8 @@ class SimResult:
                 "p95_ms": round(self.p95_ms, 3),
                 "p99_ms": round(self.p99_ms, 3),
                 "lb_certified": round(self.lb_certified_frac, 3),
-                "waited": round(self.waited_frac, 3)}
+                "waited": round(self.waited_frac, 3),
+                "stale": round(self.stale_frac, 3)}
 
 
 def make_trace(g: Graph, num_queries: int, horizon_ms: float,
@@ -89,7 +96,8 @@ class _Server:
 
 @dataclass(frozen=True)
 class BatchPolicy:
-    """Micro-batched service (the DistanceBatcher / query_batched model):
+    """Micro-batched service (the DistanceBatcher / DistanceService
+    model):
     requests accumulate at a server until ``batch_size`` are pending or
     the oldest has waited ``window_ms``; the whole batch is then served in
     one vectorized call charged ``overhead_ms + size · per_query_ms``.
@@ -296,24 +304,41 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                   schedule: "UpdateSchedule | VariableUpdateSchedule",
                   assignment: np.ndarray,
                   certified_fn, num_districts: int,
-                  batch: BatchPolicy | None = None) -> SimResult:
+                  batch: BatchPolicy | None = None,
+                  policy: "ServingPolicy | None" = None) -> SimResult:
     """``certified_fn(s, t) -> bool`` — whether Theorem 3 certifies the
     local answer for a same-district pair (precomputed by the caller from
-    the actual indexes, so the simulation uses real certification rates).
+    the actual indexes, so the simulation uses real certification rates;
+    ``DistanceService.certifier()`` produces exactly this shape).
 
     With ``batch`` set, every server runs in micro-batched service mode
-    (the query_batched engine behind a DistanceBatcher) instead of
+    (the DistanceService engine behind a DistanceBatcher) instead of
     per-query FIFO service.
+
+    ``policy`` (a ``repro.serve.ServingPolicy``) drives both knobs from
+    the same config the functional service uses: ``policy.batch``
+    supplies the micro-batching discipline when ``batch`` is not given,
+    and ``policy.rebuild == "stale_ok"`` switches the rebuild-window
+    discipline from wait-for-push to serve-stale-immediately (uncertified
+    window queries are answered from the stale index with no wait and
+    counted in ``SimResult.stale_frac``; the ``install_now`` and
+    ``certify_or_wait`` modes both charge the wait — functionally they
+    only differ in who pays for the install).
     """
+    stale_ok = policy is not None and policy.rebuild == "stale_ok"
+    if batch is None and policy is not None:
+        batch = policy.batch
     if batch is not None:
         return _simulate_edge_batched(trace, topo, schedule, assignment,
-                                      certified_fn, num_districts, batch)
+                                      certified_fn, num_districts, batch,
+                                      stale_ok=stale_ok)
     edge_servers = [_Server(topo.latency.edge_service_ms)
                     for _ in range(num_districts)]
     center = _Server(topo.latency.center_service_ms)
     lat = np.empty(len(trace), dtype=np.float64)
     certified_n = 0
     waited = 0
+    stale_n = 0
     lm = topo.latency
     for i, ev in enumerate(trace):
         ds, dt = int(assignment[ev.s]), int(assignment[ev.t])
@@ -330,6 +355,11 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                 done = edge_servers[ds].serve(arrive)
                 lat[i] = done + lm.client_edge_ms - ev.t_ms
                 continue
+            if stale_ok:                        # serve stale, no wait
+                stale_n += 1
+                done = edge_servers[ds].serve(arrive)
+                lat[i] = done + lm.client_edge_ms - ev.t_ms
+                continue
             # must wait for the shortcut push (global_ready)
             waited += 1
             done = edge_servers[ds].serve(max(arrive, global_ready))
@@ -337,18 +367,24 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
         else:
             arrive = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
             if arrive < global_ready:
-                waited += 1
-            done = center.serve(max(arrive, global_ready))
+                if stale_ok:    # the center's double-buffered old B serves
+                    stale_n += 1
+                else:
+                    waited += 1
+                    arrive = global_ready
+            done = center.serve(arrive)
             lat[i] = done + lm.edge_center_ms + lm.client_edge_ms - ev.t_ms
     return SimResult.from_latencies(
         lat, lb_frac=certified_n / max(1, len(trace)),
-        waited=waited / max(1, len(trace)))
+        waited=waited / max(1, len(trace)),
+        stale=stale_n / max(1, len(trace)))
 
 
 def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                            schedule: UpdateSchedule, assignment: np.ndarray,
                            certified_fn, num_districts: int,
-                           batch: BatchPolicy) -> SimResult:
+                           batch: BatchPolicy,
+                           stale_ok: bool = False) -> SimResult:
     """§4.2 routing with micro-batched service at every server: same
     freshness rules as the per-query path, but departures are assigned at
     batch flush time (see _BatchedServer)."""
@@ -358,6 +394,7 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
     back_ms = np.empty(len(trace), dtype=np.float64)
     certified_n = 0
     waited = 0
+    stale_n = 0
     lm = topo.latency
     for i, ev in enumerate(trace):
         ds, dt = int(assignment[ev.s]), int(assignment[ev.t])
@@ -373,6 +410,10 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                 certified_n += 1
                 edge_servers[ds].submit(i, arrive, departures)
                 continue
+            if stale_ok:                        # serve stale, no wait
+                stale_n += 1
+                edge_servers[ds].submit(i, arrive, departures)
+                continue
             waited += 1
             edge_servers[ds].submit(i, max(arrive, global_ready),
                                     departures)
@@ -380,12 +421,17 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
             arrive = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
             back_ms[i] = lm.edge_center_ms + lm.client_edge_ms
             if arrive < global_ready:
-                waited += 1
-            center.submit(i, max(arrive, global_ready), departures)
+                if stale_ok:
+                    stale_n += 1
+                else:
+                    waited += 1
+                    arrive = global_ready
+            center.submit(i, arrive, departures)
     for srv in edge_servers:
         srv.finish(departures)
     center.finish(departures)
     lat = departures + back_ms - np.array([ev.t_ms for ev in trace])
     return SimResult.from_latencies(
         lat, lb_frac=certified_n / max(1, len(trace)),
-        waited=waited / max(1, len(trace)))
+        waited=waited / max(1, len(trace)),
+        stale=stale_n / max(1, len(trace)))

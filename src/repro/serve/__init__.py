@@ -1,8 +1,18 @@
-"""Serving: batched decode scheduling (decode_step itself lives in
-models.lm; the sharded cache rules in distributed.sharding) and the
-distance-query micro-batcher feeding EdgeSystem.query_batched."""
+"""Serving: the distance request plane (DistanceService over QueryPlane
+backends, typed requests/results, ServingPolicy), the distance-query
+micro-batcher, and batched LM decode scheduling (decode_step itself
+lives in models.lm; the sharded cache rules in distributed.sharding)."""
 from .batcher import BatchedDecoder, Request
 from .distance_batcher import DistanceBatcher, DistanceRequest
+from .service import (CERTIFIED_STALE, CERTIFY_OR_WAIT, EXACT, INSTALL_NOW,
+                      REBUILD_MODES, STALE, STALE_OK, BucketedPlane,
+                      DistanceService, QueryPlan, QueryPlane, QueryRequest,
+                      QueryResult, ResultBatch, ScalarLoopPlane,
+                      ServingPolicy)
 
 __all__ = ["BatchedDecoder", "Request", "DistanceBatcher",
-           "DistanceRequest"]
+           "DistanceRequest", "DistanceService", "ServingPolicy",
+           "QueryPlane", "QueryPlan", "QueryRequest", "QueryResult",
+           "ResultBatch", "BucketedPlane", "ScalarLoopPlane",
+           "INSTALL_NOW", "CERTIFY_OR_WAIT", "STALE_OK", "REBUILD_MODES",
+           "EXACT", "CERTIFIED_STALE", "STALE"]

@@ -4,10 +4,17 @@ The serving front door of the edge deployment: clients submit (s, t)
 requests one at a time; the batcher packs them into fixed-shape groups of
 ``batch_size`` (padding short groups with rid=-1 dummy pairs so the
 engine — and hence the device — only ever sees static shapes) and drains
-each group through one vectorized ``engine(ss, ts)`` call, e.g.
-``EdgeSystem.query_batched``. Per-request latency is recorded for the
-serving benchmarks; padding requests never reach ``completed`` or the
-latency statistics.
+each group through one vectorized engine call.  Per-request latency is
+recorded for the serving benchmarks; padding requests never reach
+``completed`` or the latency statistics.
+
+The preferred engine is a ``DistanceService`` (or an ``EdgeSystem``,
+which is wrapped in one): the batcher then passes the padding mask
+through, so rid=-1 dummies are excluded from the service's rule
+counters too.  Any ``QueryPlane`` (an object with
+``execute(ss, ts) -> distances`` — e.g. a ``BatchedQueryEngine``
+snapshot), a bare callable with that signature, or a legacy object
+exposing ``query_batched`` / ``query`` also plugs in.
 
 Host-side orchestration only — the same scheduler shape as the LM
 ``serve.batcher.BatchedDecoder``, minus the autoregressive loop: a
@@ -40,29 +47,57 @@ class DistanceRequest:
 class DistanceBatcher:
     """Drains queued distance requests through a batched engine.
 
-    ``engine`` is either a callable ``(ss, ts) -> distances`` (e.g.
-    ``EdgeSystem.query_batched``) or an engine object exposing
-    ``query_batched`` / ``query`` with that signature — so a
-    ``BatchedQueryEngine``, ``ShardedBatchedEngine``, or whole
-    ``EdgeSystem`` plugs in directly.
+    ``engine`` resolution order:
+
+    1. a ``DistanceService`` — groups run through ``service.submit``
+       with the padding mask, so dummies never inflate the counters;
+    2. an ``EdgeSystem`` — wrapped in its default ``service()`` (same
+       masking);
+    3. a bare callable ``(ss, ts) -> distances``;
+    4. an object exposing ``query_batched`` / ``query`` with that
+       signature, or ``execute`` (the ``QueryPlane`` protocol).
+
+    Anything else raises ``TypeError`` naming the expected interface.
 
     ``pad=True`` (default) guarantees the engine always sees exactly
     ``batch_size`` pairs by filling short tail groups with rid=-1
-    dummies. Note the dummies are real (0, 0) queries from the engine's
-    point of view — engine-side counters (e.g. EdgeSystem.stats) include
-    them — but they never enter ``completed`` or the latency statistics.
-    Engines that already pad internally to bounded shapes (like
-    ``EdgeSystem.query_batched``) can run with ``pad=False``."""
+    dummies.  For non-service engines the dummies are real (0, 0)
+    queries from the engine's point of view, but they never enter
+    ``completed`` or the latency statistics.  Engines that already pad
+    internally to bounded shapes can run with ``pad=False``."""
 
     def __init__(self, engine: Callable[[np.ndarray, np.ndarray],
                                         np.ndarray],
                  batch_size: int = 256, pad: bool = True):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
-        if not callable(engine):
-            engine = getattr(engine, "query_batched", None) \
-                or getattr(engine, "query")
-        self.engine = engine
+        # when ``service`` is set, _run_group dispatches through
+        # service.submit with the padding mask; ``engine`` then only
+        # keeps the distances-only callable for introspection
+        self.service = None
+        from .service import DistanceService
+        if isinstance(engine, DistanceService):
+            self.service = engine
+            self.engine = engine.distances
+        elif callable(engine):
+            self.engine = engine
+        else:
+            from ..edge.router import EdgeSystem
+            if isinstance(engine, EdgeSystem):
+                self.service = engine.service()
+                self.engine = self.service.distances
+            else:
+                fn = next((getattr(engine, name)
+                           for name in ("query_batched", "query", "execute")
+                           if callable(getattr(engine, name, None))), None)
+                if fn is None:
+                    raise TypeError(
+                        "DistanceBatcher engine must be a DistanceService, "
+                        "an EdgeSystem, a callable (ss, ts) -> distances, "
+                        "or an object exposing query_batched/query/execute "
+                        "(the QueryPlane protocol); got "
+                        f"{type(engine).__name__}")
+                self.engine = fn
         self.batch_size = batch_size
         self.pad = pad
         self.queue: deque[DistanceRequest] = deque()
@@ -80,7 +115,11 @@ class DistanceBatcher:
     def _run_group(self, group: list[DistanceRequest]) -> None:
         ss = np.array([r.s for r in group], dtype=np.int64)
         ts = np.array([r.t for r in group], dtype=np.int64)
-        dist = np.asarray(self.engine(ss, ts), dtype=np.float32)
+        if self.service is not None:
+            real = np.array([r.rid >= 0 for r in group], dtype=bool)
+            dist = self.service.submit(ss, ts, real=real).distances
+        else:
+            dist = np.asarray(self.engine(ss, ts), dtype=np.float32)
         now = time.perf_counter()
         for i, r in enumerate(group):
             r.distance = float(dist[i])

@@ -131,16 +131,25 @@ def test_router_shard_border_override_and_auto(system):
     try:
         sys_.prefer_sharded = True
         sys_.shard_border = True
-        np.testing.assert_array_equal(sys_.query_batched(ss, ts), loop)
+        np.testing.assert_array_equal(
+            sys_.service().submit(ss, ts).distances, loop)
         eng = sys_._current_engine()
         assert isinstance(eng, ShardedBatchedEngine) and eng.shard_border
         # auto heuristic: a toy B is far below SHARD_BORDER_AUTO_BYTES,
         # so None must resolve to the replicated-B sharded engine
         sys_.shard_border = None
-        np.testing.assert_array_equal(sys_.query_batched(ss, ts), loop)
+        np.testing.assert_array_equal(
+            sys_.service().submit(ss, ts).distances, loop)
         eng = sys_._current_engine()
         assert isinstance(eng, ShardedBatchedEngine)
         assert not eng.shard_border
+        # ServingPolicy placement overrides beat the system attributes
+        from repro.serve import ServingPolicy
+        svc = sys_.service(ServingPolicy(engine="sharded",
+                                         shard_border=True))
+        np.testing.assert_array_equal(svc.submit(ss, ts).distances, loop)
+        eng = svc.plan(ss, ts).plane
+        assert isinstance(eng, ShardedBatchedEngine) and eng.shard_border
     finally:
         sys_.prefer_sharded = None
         sys_.shard_border = None

@@ -1,4 +1,6 @@
-"""Edge-computing runtime: EdgeSystem correctness, update cycle, simulator."""
+"""Edge-computing runtime: DistanceService correctness over a deployed
+EdgeSystem, the update cycle, rebuild-window policies, and the
+simulator."""
 import numpy as np
 import pytest
 
@@ -6,6 +8,7 @@ from repro.core import (bfs_grow_partition, dijkstra, grid_road_network,
                         perturb_weights)
 from repro.edge import (EdgeSystem, LatencyModel, Topology, UpdateSchedule,
                         make_trace, simulate_centralized, simulate_edge)
+from repro.serve import (CERTIFY_OR_WAIT, STALE_OK, ServingPolicy)
 
 
 @pytest.fixture(scope="module")
@@ -15,20 +18,38 @@ def system():
     return g, part, EdgeSystem.deploy(g, part)
 
 
+def _mid_window(g, part, seed=2, lo=0.8, hi=1.3):
+    """A system mid-rebuild-window: locals refreshed + center rebuilt on
+    perturbed weights, shortcuts NOT yet pushed."""
+    sys_ = EdgeSystem.deploy(g, part)
+    rng = np.random.default_rng(seed)
+    w2 = perturb_weights(g, rng, lo=lo, hi=hi)
+    g2 = sys_.graph.with_weights(w2)
+    sys_.graph = g2
+    for srv in sys_.servers:
+        srv.refresh_local(g2, part)
+    sys_.center.rebuild(w2)
+    return sys_, g2, rng
+
+
 def test_deploy_answers_all_query_types_exactly(system):
     g, part, sys_ = system
+    svc = sys_.service()
     rng = np.random.default_rng(0)
     for _ in range(60):
         s, t = rng.integers(0, g.num_vertices, size=2)
         ref = float(dijkstra(g, int(s))[int(t)])
-        got, rule = sys_.query(int(s), int(t))
-        assert got == pytest.approx(ref, rel=1e-5), (s, t, rule)
-    assert sys_.stats["rule1"] > 0 and sys_.stats["rule3"] > 0
+        res = svc.query(int(s), int(t))
+        assert res.distance == pytest.approx(ref, rel=1e-5), (s, t, res.rule)
+        assert res.exact and res.exactness == "exact"
+        assert res.index_version == sys_.center.version
+    assert svc.stats["rule1"] > 0 and svc.stats["rule3"] > 0
 
 
 def test_update_cycle_produces_fresh_exact_answers(system):
     g, part, _ = system
     sys_ = EdgeSystem.deploy(g, part)
+    svc = sys_.service()
     rng = np.random.default_rng(1)
     w2 = perturb_weights(g, rng)
     timings = sys_.apply_traffic_update(w2)
@@ -37,32 +58,81 @@ def test_update_cycle_produces_fresh_exact_answers(system):
     for _ in range(40):
         s, t = rng.integers(0, g2.num_vertices, size=2)
         ref = float(dijkstra(g2, int(s))[int(t)])
-        got, _ = sys_.query(int(s), int(t))
-        assert got == pytest.approx(ref, rel=1e-5)
+        assert svc.query(int(s), int(t)).distance == pytest.approx(
+            ref, rel=1e-5)
 
 
 def test_rebuild_window_lb_fallback_still_exact(system):
     """Queries inside the window (shortcuts dropped) stay exact: either the
     LB certificate fires or the system waits for the push — never stale."""
     g, part, _ = system
-    sys_ = EdgeSystem.deploy(g, part)
-    rng = np.random.default_rng(2)
-    w2 = perturb_weights(g, rng, lo=0.8, hi=1.3)
-    # simulate mid-window: locals refreshed + center rebuilt, but shortcuts
-    # NOT yet pushed
-    g2 = sys_.graph.with_weights(w2)
-    sys_.graph = g2
-    for srv in sys_.servers:
-        srv.refresh_local(g2, part)
-    sys_.center.rebuild(w2)
+    sys_, g2, rng = _mid_window(g, part, seed=2)
+    svc = sys_.service()
     checked = 0
     while checked < 30:
         s, t = rng.integers(0, g2.num_vertices, size=2)
         ref = float(dijkstra(g2, int(s))[int(t)])
-        got, _ = sys_.query(int(s), int(t))
-        assert got == pytest.approx(ref, rel=1e-5), (s, t)
+        res = svc.query(int(s), int(t))
+        assert res.distance == pytest.approx(ref, rel=1e-5), (s, t)
+        assert res.exact
         checked += 1
-    assert sys_.stats["lb_fallback_attempts"] > 0
+    assert svc.stats["lb_fallback_attempts"] > 0
+
+
+def test_rebuild_window_policy_modes_agree_where_certified(system):
+    """All three ServingPolicy rebuild modes on the SAME mid-update
+    system: identical distances where the Theorem-3 certificate fires,
+    install_now == certify_or_wait everywhere, and stale_ok residue
+    flagged non-exact (λ is an upper bound on the true distance)."""
+    g, part, _ = system
+    sys_, g2, rng = _mid_window(g, part, seed=3)
+    ss = rng.integers(0, g2.num_vertices, size=256)
+    ts = rng.integers(0, g2.num_vertices, size=256)
+    results = {}
+    # non-mutating modes first: install_now closes the window
+    for mode in (STALE_OK, CERTIFY_OR_WAIT, "install_now"):
+        svc = sys_.service(ServingPolicy(rebuild=mode))
+        results[mode] = svc.submit(ss, ts)
+        assert svc.stats["lb_fallback_attempts"] > 0, mode
+    stale_b = results[STALE_OK]
+    wait_b = results[CERTIFY_OR_WAIT]
+    now_b = results["install_now"]
+    # certify_or_wait must not have closed the window; install_now does
+    assert wait_b.waited.any() and not stale_b.waited.any()
+    certified = stale_b.exactness_codes == 1
+    assert certified.any()
+    np.testing.assert_array_equal(stale_b.distances[certified],
+                                  wait_b.distances[certified])
+    np.testing.assert_array_equal(wait_b.distances, now_b.distances)
+    stale = ~stale_b.exact
+    assert stale.any()
+    assert (stale_b.exactness_codes[stale] == 2).all()
+    # the stale λ is an upper bound, and strictly above somewhere
+    assert (stale_b.distances[stale]
+            >= now_b.distances[stale] - np.float32(1e-6)).all()
+    # install_now answers are exact on the new weights
+    for i in range(0, 256, 17):
+        ref = float(dijkstra(g2, int(ss[i]))[int(ts[i])])
+        assert now_b.distances[i] == pytest.approx(ref, rel=1e-5)
+
+
+def test_certify_or_wait_leaves_serving_state_untouched(system):
+    g, part, _ = system
+    sys_, g2, rng = _mid_window(g, part, seed=4)
+    ss = rng.integers(0, g2.num_vertices, size=96)
+    ts = rng.integers(0, g2.num_vertices, size=96)
+    svc = sys_.service(ServingPolicy(rebuild=CERTIFY_OR_WAIT))
+    batch = svc.submit(ss, ts)
+    # no shortcut was installed: the rebuild window is still open
+    assert all(srv.augmented is None for srv in sys_.servers)
+    assert sys_.current_engine() is None
+    assert batch.waited.any() and batch.exact.all()
+    # ... and the answers already equal the post-push steady state
+    for srv in sys_.servers:
+        srv.install_shortcuts(g2, part, sys_.center.shortcuts_for(
+            srv.district_id), sys_.center.version)
+    np.testing.assert_array_equal(
+        sys_.service().submit(ss, ts).distances, batch.distances)
 
 
 def test_simulator_edge_beats_centralized_under_updates():
@@ -77,17 +147,7 @@ def test_simulator_edge_beats_centralized_under_updates():
                               rebuild_ms_centralized=2_000.0,
                               rebuild_ms_edge_bl=400.0,
                               rebuild_ms_edge_local=50.0)
-
-    cert_cache: dict[tuple[int, int], bool] = {}
-
-    def certified(s, t):
-        key = (s, t)
-        if key not in cert_cache:
-            srv = sys_.servers[int(part.assignment[s])]
-            _, ok = srv.answer_certified(s, t)
-            cert_cache[key] = ok
-        return cert_cache[key]
-
+    certified = sys_.service().certifier()
     central = simulate_centralized(trace, topo, schedule)
     edge = simulate_edge(trace, topo, schedule, part.assignment,
                          certified, part.num_districts)
@@ -95,6 +155,13 @@ def test_simulator_edge_beats_centralized_under_updates():
     assert edge.mean_ms < central.mean_ms
     assert edge.p95_ms < central.p95_ms
     assert edge.lb_certified_frac > 0
+    # the stale_ok policy trades exactness for zero rebuild-window waits
+    stale = simulate_edge(trace, topo, schedule, part.assignment,
+                          certified, part.num_districts,
+                          policy=ServingPolicy(rebuild=STALE_OK))
+    assert stale.waited_frac == 0.0
+    assert stale.stale_frac > 0
+    assert stale.mean_ms <= edge.mean_ms
 
 
 def test_simulator_no_updates_edge_still_lower_latency():

@@ -64,7 +64,7 @@ def _engine_case():
             "shard": sharded.query(ss, ts),
             "bshard": border.query(ss, ts),
             "loop": system.query_loop(ss, ts),
-            "auto": system.query_batched(ss, ts),
+            "auto": system.service().submit(ss, ts).distances,
             "auto_cls": type(system._current_engine()).__name__,
             "per_dev_bytes": sharded.district_table_bytes_per_device(),
             "resident_bytes": sharded.size_bytes(),

@@ -270,6 +270,7 @@ def test_center_apply_delta_noop_keeps_version(grid):
 def test_edge_system_incremental_update_stays_exact(grid):
     g, part = grid
     sys_ = EdgeSystem.deploy(g, part, builder="jax")
+    svc = sys_.service()
     rng = np.random.default_rng(7)
     for name in ("incident", "rush_hour"):
         w2 = scenario_weights(name, sys_.graph, part, rng, 0.03)
@@ -279,7 +280,7 @@ def test_edge_system_incremental_update_stays_exact(grid):
         for _ in range(25):
             s, t = rng.integers(0, g2.num_vertices, size=2)
             ref = float(dijkstra(g2, int(s))[int(t)])
-            got, _ = sys_.query(int(s), int(t))
+            got = svc.query(int(s), int(t)).distance
             assert got == pytest.approx(ref, rel=1e-5), (s, t)
 
 
@@ -305,7 +306,8 @@ def test_edge_system_clean_districts_keep_serving():
     ts = rng.integers(0, n, size=64)
     ref = np.array([dijkstra(g2, int(s))[int(t)] for s, t in zip(ss, ts)],
                    dtype=np.float32)
-    np.testing.assert_allclose(sys_.query_batched(ss, ts), ref, rtol=1e-5)
+    np.testing.assert_allclose(sys_.service().submit(ss, ts).distances,
+                               ref, rtol=1e-5)
 
 
 def test_rebuild_window_parity_while_update_midflight(grid):
@@ -325,20 +327,22 @@ def test_rebuild_window_parity_while_update_midflight(grid):
     for i in rep["stale_districts"]:
         sys_.servers[i].augmented = None      # shortcut push still pending
     assert sys_.current_engine() is None      # rebuild window is open
+    svc = sys_.service()
     checked = 0
     while checked < 25:
         s, t = rng.integers(0, g2.num_vertices, size=2)
         ref = float(dijkstra(g2, int(s))[int(t)])
-        got, _ = sys_.query(int(s), int(t))
-        assert got == pytest.approx(ref, rel=1e-5), (s, t)
+        res = svc.query(int(s), int(t))
+        assert res.distance == pytest.approx(ref, rel=1e-5), (s, t)
+        assert res.exact
         checked += 1
-    assert sys_.stats["lb_fallback_attempts"] > 0
+    assert svc.stats["lb_fallback_attempts"] > 0
     # batched path mid-flight, then the window closes and the engine swaps
     ss = rng.integers(0, g2.num_vertices, size=48)
     ts = rng.integers(0, g2.num_vertices, size=48)
     ref = np.array([dijkstra(g2, int(s))[int(t)] for s, t in zip(ss, ts)],
                    dtype=np.float32)
-    np.testing.assert_allclose(sys_.query_batched(ss, ts), ref, rtol=1e-5)
+    np.testing.assert_allclose(svc.submit(ss, ts).distances, ref, rtol=1e-5)
     assert sys_.current_engine() is not None
 
 
@@ -355,28 +359,31 @@ def test_engine_layouts_bitwise_after_incremental_update(grid):
     ss = rng.integers(0, g.num_vertices, size=256)
     ts = rng.integers(0, g.num_vertices, size=256)
     ref = sys_.query_loop(ss, ts)
-    for prefer, border in ((False, None), (True, False), (True, True)):
-        sys_.prefer_sharded, sys_.shard_border = prefer, border
-        np.testing.assert_array_equal(sys_.query_batched(ss, ts), ref)
+    from repro.serve import ServingPolicy
+    for engine, border in (("replicated", None), ("sharded", False),
+                           ("sharded", True)):
+        svc = sys_.service(ServingPolicy(engine=engine, shard_border=border))
+        np.testing.assert_array_equal(svc.submit(ss, ts).distances, ref)
 
 
-def test_query_many_forwards_client_districts_and_kernels(grid):
+def test_service_forwards_client_districts_and_kernels(grid):
     g, part = grid
     sys_ = EdgeSystem.deploy(g, part)
-    rng = np.random.default_rng(4)
+    from repro.serve import ServingPolicy
     # same-district pairs observed from another district are rule 2
     ds = part.assignment
     s = int(np.nonzero(ds == 0)[0][0])
     t = int(np.nonzero(ds == 0)[0][1])
     ss = np.array([s]); ts = np.array([t])
     other = np.array([1], dtype=np.int32)
-    before = dict(sys_.stats)
-    out = sys_.query_many(ss, ts, client_districts=other, use_kernels=False)
-    assert sys_.stats["rule2"] == before["rule2"] + 1
+    svc = sys_.service(ServingPolicy(use_kernels=False))
+    out = svc.submit(ss, ts, client_districts=other).distances
+    assert svc.stats["rule2"] == 1
     ref = float(dijkstra(g, s)[t])
     assert out[0] == pytest.approx(ref, rel=1e-5)
     np.testing.assert_allclose(
-        sys_.query_many(ss, ts, client_districts=other), out, rtol=1e-6)
+        sys_.service().submit(ss, ts, client_districts=other).distances,
+        out, rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -9,9 +9,10 @@ Checks, in order:
 2. every backticked repo path (``src/...py``, ``docs/...md``, ...)
    mentioned in those files exists — docs must not reference code that
    was moved or deleted;
-3. every fenced ```python block in README.md runs to completion with
-   PYTHONPATH=src (the "Choosing an engine" quickstart, notably), so
-   the documented API can't silently rot.
+3. every fenced ```python block in README.md AND docs/*.md runs to
+   completion with PYTHONPATH=src (the "Choosing an engine" quickstart
+   and the ARCHITECTURE "Request plane" sketch, notably), so the
+   documented API can't silently rot.
 
 Run from the repo root:  PYTHONPATH=src python tools/check_docs.py
 """
@@ -56,35 +57,39 @@ def check_links() -> list[str]:
     return errors
 
 
-def run_readme_snippets() -> list[str]:
+def run_doc_snippets() -> list[str]:
     errors = []
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [str(ROOT / "src")]
         + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
-    blocks = PY_BLOCK.findall((ROOT / "README.md").read_text())
-    if not blocks:
-        return ["README.md: no python snippet found (quickstart removed?)"]
-    for i, code in enumerate(blocks):
-        try:
-            out = subprocess.run([sys.executable, "-c", code], env=env,
-                                 cwd=ROOT, capture_output=True, text=True,
-                                 timeout=600)
-        except subprocess.TimeoutExpired:
-            errors.append(f"README.md python block #{i + 1} timed out "
-                          f"(600 s)")
-            continue
-        if out.returncode != 0:
-            errors.append(f"README.md python block #{i + 1} failed:\n"
-                          f"{out.stderr[-1500:]}")
-        else:
-            sys.stdout.write(out.stdout)
+    found_any = False
+    for f in MD_FILES:
+        rel = f.relative_to(ROOT)
+        blocks = PY_BLOCK.findall(f.read_text())
+        found_any = found_any or bool(blocks)
+        for i, code in enumerate(blocks):
+            try:
+                out = subprocess.run([sys.executable, "-c", code], env=env,
+                                     cwd=ROOT, capture_output=True,
+                                     text=True, timeout=600)
+            except subprocess.TimeoutExpired:
+                errors.append(f"{rel} python block #{i + 1} timed out "
+                              f"(600 s)")
+                continue
+            if out.returncode != 0:
+                errors.append(f"{rel} python block #{i + 1} failed:\n"
+                              f"{out.stderr[-1500:]}")
+            else:
+                sys.stdout.write(out.stdout)
+    if not found_any:
+        return ["no python snippet found in any doc (quickstart removed?)"]
     return errors
 
 
 def main() -> int:
     errors = check_links()
-    errors += run_readme_snippets()
+    errors += run_doc_snippets()
     for e in errors:
         print(f"FAIL: {e}", file=sys.stderr)
     print(f"check_docs: {len(MD_FILES)} files linted, "
