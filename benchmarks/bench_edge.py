@@ -19,7 +19,7 @@ from repro.edge import (EdgeSystem, LatencyModel, Topology, UpdateSchedule,
 from .common import emit
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
     g = grid_road_network(40, 40, seed=11)
     part = grid_partition(g, 40, 40, 2, 4)
     sys_ = EdgeSystem.deploy(g, part)
@@ -38,7 +38,8 @@ def run() -> None:
     emit("edge/rebuild-BL+push", bl_ms * 1e3, "measured")
     emit("edge/rebuild-centralized-PLL", central_ms * 1e3, "measured")
 
-    trace = make_trace(g, 5000, horizon_ms=60_000.0, seed=5)
+    trace = make_trace(g, 1000 if quick else 5000, horizon_ms=60_000.0,
+                       seed=5)
     topo = Topology(part.num_districts, LatencyModel())
     schedule = UpdateSchedule(epoch_ms=10_000.0,
                               rebuild_ms_centralized=central_ms,
@@ -55,7 +56,7 @@ def run() -> None:
          f"p95={edge.p95_ms:.1f}ms;waited={edge.waited_frac:.3f};"
          f"lb_hit={edge.lb_certified_frac:.3f}")
     emit("edge/latency-speedup", central.mean_ms / edge.mean_ms * 1e6,
-         "mean centralized/edge ratio (x1e-6 in col2)")
+         "mean centralized/edge ratio (x1e-6 in col2)", unit="speedup_x")
     from repro.serve import STALE_OK, ServingPolicy
     stale = simulate_edge(trace, topo, schedule, part.assignment, certified,
                           part.num_districts,

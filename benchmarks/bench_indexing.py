@@ -33,8 +33,9 @@ NETWORKS = [
 PLL_CAP = 3_000  # full PLL baseline only on graphs up to this many vertices
 
 
-def run() -> None:
-    for name, make, make_part in NETWORKS:
+def run(quick: bool = False) -> None:
+    networks = NETWORKS[:1] if quick else NETWORKS
+    for name, make, make_part in networks:
         g = make()
         part = make_part(g)
         m = part.num_districts

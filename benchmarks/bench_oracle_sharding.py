@@ -97,7 +97,7 @@ def run(quick: bool = False) -> None:
         emit(f"oracle-sharding/{name}",
              r[name]["coll_mb"] * 1e3,  # KB collectives per 4k queries
              f"arg_mb_per_dev={r[name]['arg_mb']:.2f};n={r['n']};q={r['q']}"
-             f";col2=coll_kb_per_4k_queries")
+             f";col2=coll_kb_per_4k_queries", unit="bytes")
     run_engine_sweep(quick=quick)
 
 

@@ -39,38 +39,41 @@ SHARDED_SETUP = ("g = grid_road_network(50, 50, seed=7); "
                  "part = grid_partition(g, 50, 50, 3, 4)")
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
     g = grid_road_network(50, 50, seed=7)
     part = grid_partition(g, 50, 50, 3, 4)
     oracle = DistanceOracle.build(g, part)
     full = pll(g)
     rng = np.random.default_rng(1)
-    ss = rng.integers(0, g.num_vertices, size=NUM_QUERIES)
-    ts = rng.integers(0, g.num_vertices, size=NUM_QUERIES)
+    num_queries = NUM_QUERIES // 5 if quick else NUM_QUERIES
+    bidij_queries = 10 if quick else BIDIJ_QUERIES
+    ss = rng.integers(0, g.num_vertices, size=num_queries)
+    ts = rng.integers(0, g.num_vertices, size=num_queries)
 
     _, sec = timeit(lambda: oracle.query_many(ss, ts), repeats=3)
-    emit("query/ours-BL-batched", sec / NUM_QUERIES * 1e6,
-         f"n={g.num_vertices};q={NUM_QUERIES}")
+    emit("query/ours-BL-batched", sec / num_queries * 1e6,
+         f"n={g.num_vertices};q={num_queries}")
 
-    sel = rng.integers(0, NUM_QUERIES, size=500)
+    sel = rng.integers(0, num_queries, size=100 if quick else 500)
     _, sec = timeit(lambda: [oracle.query(int(ss[i]), int(ts[i]))
                              for i in sel], repeats=2)
     emit("query/ours-BL-single", sec / len(sel) * 1e6, "per-call python")
 
     _, sec = timeit(lambda: full.query_many(ss, ts), repeats=3)
-    emit("query/PLL-batched", sec / NUM_QUERIES * 1e6,
+    emit("query/PLL-batched", sec / num_queries * 1e6,
          f"labels_mb={full.size_bytes()/1e6:.2f}")
 
     _, sec = timeit(lambda: [bidirectional_dijkstra(g, int(ss[i]),
                                                     int(ts[i]))
-                             for i in range(BIDIJ_QUERIES)], repeats=1,
+                             for i in range(bidij_queries)], repeats=1,
                     warmup=0)
-    emit("query/BiDijkstra", sec / BIDIJ_QUERIES * 1e6,
+    emit("query/BiDijkstra", sec / bidij_queries * 1e6,
          "online-search baseline")
 
     system = run_engine(g, part, rng)
     run_front_door(g, part, rng, system=system)
-    run_sharded()
+    if not quick:       # the oracle_sharding --quick sweep covers the
+        run_sharded()   # subprocess engine path at E in {1, 2}
 
 
 def run_engine(g=None, part=None, rng=None):
@@ -99,8 +102,9 @@ def run_engine(g=None, part=None, rng=None):
         if b == 1024:
             speedup_1024 = loop_sec / ENGINE_LOOP_QUERIES / (sec / b)
         emit(f"engine/batched-{b}", sec / b * 1e6, f"qps={qps:,.0f}")
-    emit("engine/speedup-vs-loop-1024", speedup_1024,
-         "x faster per query at batch 1024")
+    if speedup_1024 is not None:    # 1024 could be dropped from the sweep
+        emit("engine/speedup-vs-loop-1024", speedup_1024,
+             "x faster per query at batch 1024", unit="speedup_x")
     return system
 
 
@@ -163,12 +167,14 @@ def run_sharded() -> None:
     emit("engine/sharded-table-bytes-per-device",
          r["per_device_table_bytes"],
          f"replicated={r['replicated_table_bytes']}"
-         f";district_frac={dfrac:.3f};resident_frac={rfrac:.3f}")
+         f";district_frac={dfrac:.3f};resident_frac={rfrac:.3f}",
+         unit="bytes")
     emit("engine/border-sharded-resident-bytes-per-device",
          r["border_resident_bytes"],
          f"replicated={r['replicated_table_bytes']}"
          f";border_bytes_per_dev={r['border_table_bytes_per_device']}"
-         f";border_resident_frac={bfrac:.3f};n={r['n']};q={r['q']}")
+         f";border_resident_frac={bfrac:.3f};n={r['n']};q={r['q']}",
+         unit="bytes")
 
 
 if __name__ == "__main__":

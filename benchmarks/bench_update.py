@@ -85,7 +85,7 @@ def run(quick: bool = False) -> None:
              f";frac_dirty={delta.frac_dirty:.3f}"
              f";dirty_districts={len(delta.dirty_districts)}"
              f";scoped={rep['incremental']}"
-             f";col1=incremental_ms")
+             f";col1=incremental_ms", unit="ms")
 
 
 if __name__ == "__main__":

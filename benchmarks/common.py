@@ -9,13 +9,24 @@ import subprocess
 import sys
 import time
 
+from . import telemetry
+
+
+def subprocess_pythonpath(env: dict) -> str:
+    """``src`` prepended to the inherited PYTHONPATH, empty components
+    dropped: ``"".split(os.pathsep)`` yields ``[""]``, and a trailing
+    empty component (``PYTHONPATH=src:``) is an implicit cwd entry on
+    the child's ``sys.path``."""
+    return os.pathsep.join(
+        ["src"] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                   if p])
+
 
 def run_json_subprocess(code: str, timeout: int = 560) -> dict:
     """Run a Python snippet in a fresh interpreter (PYTHONPATH=src, repo
     root cwd) and parse the last JSON line it prints."""
     env = dict(os.environ)
-    env["PYTHONPATH"] = os.pathsep.join(
-        ["src"] + env.get("PYTHONPATH", "").split(os.pathsep))
+    env["PYTHONPATH"] = subprocess_pythonpath(env)
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=timeout,
                          cwd=os.path.dirname(os.path.dirname(
@@ -95,5 +106,11 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
     return out, best
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    print(f"{name},{us_per_call:.3f},{derived}")
+def emit(name: str, value: float, derived: str = "",
+         unit: str = "us_per_call", config: dict | None = None) -> None:
+    """Print the historical ``name,value,derived`` CSV row AND record a
+    structured ``{name, value, unit, derived, config}`` result into the
+    active telemetry sink (``benchmarks.run --json``), if any.  ``unit``
+    tells ``compare.py`` which direction is a regression."""
+    print(f"{name},{value:.3f},{derived}")
+    telemetry.record(name, value, unit=unit, derived=derived, config=config)

@@ -1,0 +1,175 @@
+"""Diff two ``BENCH_PR<N>.json`` files with regression gates.
+
+    PYTHONPATH=src:. python -m benchmarks.compare BENCH_PR6.json \
+        [BENCH_PR5.json] [--latency-tol 0.25] [--throughput-tol 0.25] \
+        [--bytes-tol 0.02] [--warn-only-timing]
+
+With no baseline argument the highest-numbered ``BENCH_PR<k>.json``
+(k < current) next to the current file is used; when none exists the
+file is compared against itself (a clean no-op — the first PR that
+introduces telemetry has nothing to regress against).
+
+Gate semantics, by the ``unit`` field of each result row:
+
+* lower-is-better (``us_per_call``, ``us``, ``ms``, ``s``, ``bytes``):
+  regression when ``current > baseline * (1 + tol)``;
+* higher-is-better (``qps``, ``goodput_qps``, ``speedup_x``, ``ratio``):
+  regression when ``current < baseline * (1 - tol)``;
+* anything else (``info`` — shed/stale fractions) is recorded, never
+  gated.
+
+``--latency-tol`` / ``--throughput-tol`` gate the timing-derived units,
+``--bytes-tol`` gates resident/index byte counts (deterministic — the
+tight default is intentional).  ``--warn-only-timing`` downgrades
+timing/throughput regressions to warnings (exit 0) for noisy CI
+runners while keeping byte regressions hard failures; the tolerance
+itself is the variance floor below which changes are not even warned
+about.  Exit status: 0 clean (or warnings only), 1 gate tripped or
+unreadable input.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+LOWER_IS_BETTER = ("us_per_call", "us", "ms", "s", "seconds", "bytes")
+HIGHER_IS_BETTER = ("qps", "goodput_qps", "speedup_x", "ratio")
+# any other unit (e.g. "info" for shed/stale fractions) is recorded but
+# not gated — direction depends on context the gate can't know
+
+
+def load(path: str) -> dict:
+    """Parse a results JSON; unreadable/corrupt files exit with a clear
+    message instead of a bare traceback."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise SystemExit(f"compare: {path}: no such file")
+    except json.JSONDecodeError as e:
+        raise SystemExit(
+            f"compare: {path} is not valid JSON ({e}) — truncated or "
+            "corrupt benchmark results; regenerate with "
+            "`python -m benchmarks.run --json <path>`")
+
+
+def find_baseline(current_path: str, current_pr: int | None) -> str:
+    """Highest-numbered BENCH_PR<k>.json with k < current, else the
+    current file itself (self-compare is trivially clean)."""
+    folder = os.path.dirname(os.path.abspath(current_path))
+    best, best_pr = None, -1
+    for cand in glob.glob(os.path.join(folder, "BENCH_PR*.json")):
+        m = re.search(r"BENCH_PR(\d+)\.json$", cand)
+        if not m:
+            continue
+        pr = int(m.group(1))
+        if current_pr is not None and pr >= current_pr:
+            continue
+        if os.path.abspath(cand) == os.path.abspath(current_path):
+            continue
+        if pr > best_pr:
+            best, best_pr = cand, pr
+    return best if best is not None else current_path
+
+
+def index_results(doc: dict) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for row in doc.get("results", []):
+        out[row["name"]] = row      # duplicate names: last write wins
+    return out
+
+
+def classify(unit: str) -> tuple[int, bool]:
+    """(direction, is_timing): direction +1 = lower is better, -1 =
+    higher is better, 0 = informational (not gated)."""
+    if unit in LOWER_IS_BETTER:
+        return 1, unit != "bytes"
+    if unit in HIGHER_IS_BETTER:
+        return -1, True
+    return 0, True
+
+
+def compare(current: dict, baseline: dict, *, latency_tol: float = 0.25,
+            throughput_tol: float = 0.25, bytes_tol: float = 0.02,
+            warn_only_timing: bool = False) -> tuple[list[str], list[str]]:
+    """Returns (failures, warnings) — human-readable gate reports."""
+    cur, base = index_results(current), index_results(baseline)
+    failures: list[str] = []
+    warnings: list[str] = []
+    if current.get("profile") != baseline.get("profile"):
+        warnings.append(
+            f"profile mismatch: current={current.get('profile')!r} vs "
+            f"baseline={baseline.get('profile')!r} — values are not "
+            "like-for-like (quick and full sweeps use different shapes)")
+    for name in sorted(set(base) - set(cur)):
+        warnings.append(f"missing: {name} (present in baseline)")
+    for name, row in sorted(cur.items()):
+        if name not in base:
+            continue
+        b, c = base[name]["value"], row["value"]
+        unit = row.get("unit", "us_per_call")
+        direction, is_timing = classify(unit)
+        if direction == 0:
+            continue
+        if b == 0.0:                # nothing to take a ratio against
+            if c != 0.0 and not is_timing:
+                failures.append(f"{name}: {unit} grew from 0 to {c:g}")
+            continue
+        rel = (c - b) / abs(b)
+        tol = (bytes_tol if unit == "bytes" else
+               throughput_tol if direction < 0 else latency_tol)
+        regressed = rel > tol if direction > 0 else rel < -tol
+        if not regressed:
+            continue
+        msg = (f"{name}: {b:g} -> {c:g} {unit} "
+               f"({rel * 100:+.1f}%, tol ±{tol * 100:.0f}%)")
+        if is_timing and warn_only_timing:
+            warnings.append(msg)
+        else:
+            failures.append(msg)
+    return failures, warnings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate BENCH_PR<N>.json against the previous PR's")
+    ap.add_argument("current", help="current BENCH_PR<N>.json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="baseline JSON (default: highest BENCH_PR<k> "
+                         "with k < current, else self)")
+    ap.add_argument("--latency-tol", type=float, default=0.25,
+                    help="latency regression gate (fraction, default .25)")
+    ap.add_argument("--throughput-tol", type=float, default=0.25,
+                    help="throughput regression gate (default .25)")
+    ap.add_argument("--bytes-tol", type=float, default=0.02,
+                    help="resident-bytes growth gate (default .02)")
+    ap.add_argument("--warn-only-timing", action="store_true",
+                    help="timing regressions warn instead of fail (CI "
+                         "runner noise); bytes still hard-fail")
+    args = ap.parse_args(argv)
+
+    current = load(args.current)
+    baseline_path = args.baseline or find_baseline(
+        args.current, current.get("pr"))
+    baseline = current if baseline_path == args.current else \
+        load(baseline_path)
+    failures, warnings = compare(
+        current, baseline, latency_tol=args.latency_tol,
+        throughput_tol=args.throughput_tol, bytes_tol=args.bytes_tol,
+        warn_only_timing=args.warn_only_timing)
+    for w in warnings:
+        print(f"WARN: {w}")
+    for f in failures:
+        print(f"FAIL: {f}")
+    n = len(index_results(current))
+    print(f"compare: {args.current} vs {baseline_path}: {n} metrics, "
+          f"{len(failures)} failures, {len(warnings)} warnings")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,11 @@ def load(path):
             return json.load(f)
     except FileNotFoundError:
         return {}
+    except json.JSONDecodeError as e:
+        raise SystemExit(
+            f"report: {path} is not valid JSON ({e}) — the results file "
+            "is truncated or corrupt; delete it and re-run the dry-run/"
+            "roofline sweep that produced it")
 
 
 def dryrun_table(cells: dict) -> str:

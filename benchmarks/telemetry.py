@@ -1,0 +1,171 @@
+"""Structured benchmark telemetry: the ``BENCH_PR<N>.json`` result sink.
+
+Every distance benchmark keeps printing its ``name,value,derived`` CSV
+row through ``common.emit``; when a sink is active (``benchmarks.run
+--json BENCH_PR6.json`` opens one) each row is *also* recorded as a
+structured result, and section context managers capture process RSS
+around every benchmark module.  The file is the unit the perf
+trajectory is measured in: ``benchmarks/compare.py`` diffs two of them
+with regression gates.
+
+Schema (``schema_version`` 1)::
+
+    {
+      "schema_version": 1,
+      "pr": 6,                      # BENCH_PR<N>.json ordinal
+      "argv": ["-m", "benchmarks.run", ...],
+      "machine": {
+        "platform": "...", "python": "3.10.x", "hostname": "...",
+        "cpu_count": 8, "jax": "0.4.37", "backend": "cpu",
+        "device_count": 1
+      },
+      "sections": {                 # one per benchmark module run
+        "query": {"seconds": 12.3,
+                   "rss_before_bytes": ..., "rss_after_bytes": ...,
+                   "peak_rss_bytes": ...}
+      },
+      "results": [                  # one per emit() call
+        {"section": "query", "name": "engine/batched-1024",
+         "value": 1.87, "unit": "us_per_call",
+         "derived": "qps=535,000", "config": {...} | null}
+      ]
+    }
+
+Units drive the ``compare.py`` gate direction: ``us_per_call`` / ``ms``
+/ ``s`` / ``bytes`` are lower-is-better, ``qps`` / ``speedup_x`` /
+``ratio`` higher-is-better, ``info`` ungated (see
+``compare.LOWER_IS_BETTER`` / ``HIGHER_IS_BETTER``).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import platform
+import resource
+import socket
+import sys
+import time
+
+SCHEMA_VERSION = 1
+
+
+def rss_bytes() -> int:
+    """Current resident set size (Linux /proc; 0 where unavailable)."""
+    try:
+        with open("/proc/self/statm") as f:
+            return int(f.read().split()[1]) * os.sysconf("SC_PAGE_SIZE")
+    except (OSError, IndexError, ValueError):
+        return 0
+
+
+def peak_rss_bytes() -> int:
+    """Lifetime peak RSS of this process (ru_maxrss is KiB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+
+
+def machine_meta() -> dict:
+    meta = {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "hostname": socket.gethostname(),
+        "cpu_count": os.cpu_count(),
+    }
+    try:                            # jax is optional at the sink layer
+        import jax
+        meta["jax"] = jax.__version__
+        meta["backend"] = jax.default_backend()
+        meta["device_count"] = jax.device_count()
+    except Exception:               # noqa: BLE001 — record what we can
+        meta["jax"] = None
+    return meta
+
+
+class Sink:
+    """Accumulates structured benchmark rows and writes one JSON file."""
+
+    def __init__(self, path: str, pr: int | None = None,
+                 profile: str = "full"):
+        self.path = path
+        self.pr = pr if pr is not None else _pr_from_path(path)
+        self.profile = profile      # "quick" | "full" — compare.py warns
+        self.results: list[dict] = []                 # on a mismatch
+        self.sections: dict[str, dict] = {}
+        self._section: str | None = None
+
+    def record(self, name: str, value: float, unit: str = "us_per_call",
+               derived: str = "", config: dict | None = None) -> None:
+        self.results.append({
+            "section": self._section, "name": str(name),
+            "value": float(value), "unit": str(unit),
+            "derived": str(derived), "config": config})
+
+    @contextlib.contextmanager
+    def section(self, name: str):
+        """Group subsequent records under ``name`` and snapshot process
+        RSS + wall time around the block (overload/leak telemetry)."""
+        prev, self._section = self._section, name
+        entry = {"rss_before_bytes": rss_bytes()}
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            entry["seconds"] = time.perf_counter() - t0
+            entry["rss_after_bytes"] = rss_bytes()
+            entry["peak_rss_bytes"] = peak_rss_bytes()
+            self.sections[name] = entry
+            self._section = prev
+
+    def to_dict(self) -> dict:
+        return {"schema_version": SCHEMA_VERSION, "pr": self.pr,
+                "profile": self.profile, "argv": sys.argv,
+                "machine": machine_meta(),
+                "sections": self.sections, "results": self.results}
+
+    def write(self, path: str | None = None) -> str:
+        path = path or self.path
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        return path
+
+
+def _pr_from_path(path: str) -> int | None:
+    import re
+    m = re.search(r"BENCH_PR(\d+)", os.path.basename(path))
+    return int(m.group(1)) if m else None
+
+
+# -- module-level active sink (emit() routes through here) -------------------
+_SINK: Sink | None = None
+
+
+def start(path: str, pr: int | None = None,
+          profile: str = "full") -> Sink:
+    """Open the module-level sink every ``common.emit`` feeds."""
+    global _SINK
+    _SINK = Sink(path, pr=pr, profile=profile)
+    return _SINK
+
+
+def stop() -> None:
+    global _SINK
+    _SINK = None
+
+
+def current() -> Sink | None:
+    return _SINK
+
+
+def record(name: str, value: float, unit: str = "us_per_call",
+           derived: str = "", config: dict | None = None) -> None:
+    """No-op unless a sink is active — benchmarks never need to know."""
+    if _SINK is not None:
+        _SINK.record(name, value, unit=unit, derived=derived, config=config)
+
+
+def section(name: str):
+    """Section context on the active sink (null context when none)."""
+    if _SINK is not None:
+        return _SINK.section(name)
+    return contextlib.nullcontext()

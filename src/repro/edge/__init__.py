@@ -10,6 +10,8 @@ from .simulator import (BatchPolicy, QueryEvent, SimResult, UpdateSchedule,
                         VariableUpdateSchedule, make_trace,
                         run_update_epochs, simulate_centralized,
                         simulate_edge)
+from .traffic import (TRAFFIC_SHAPES, arrival_times, poisson_count,
+                      rate_profile)
 from .sharded_oracle import (ShardedOracleData, default_edge_mesh,
                              pack_for_mesh, pack_tables, prepare_queries,
                              make_sharded_query_fn, sharded_query)

@@ -73,9 +73,14 @@ class SimResult:
 
 
 def make_trace(g: Graph, num_queries: int, horizon_ms: float,
-               seed: int = 0) -> list[QueryEvent]:
+               seed: int = 0, shape: str = "uniform") -> list[QueryEvent]:
+    """Query trace with arrival times drawn from a traffic shape
+    (``repro.edge.traffic``: uniform / diurnal / flash_crowd — shared
+    with the open-loop load harness).  ``uniform`` reproduces the
+    historical trace bit-for-bit."""
+    from .traffic import arrival_times
     rng = np.random.default_rng(seed)
-    times = np.sort(rng.uniform(0, horizon_ms, size=num_queries))
+    times = arrival_times(num_queries, horizon_ms, shape=shape, rng=rng)
     ss = rng.integers(0, g.num_vertices, size=num_queries)
     ts = rng.integers(0, g.num_vertices, size=num_queries)
     return [QueryEvent(float(a), int(b), int(c))
@@ -160,8 +165,13 @@ class _BatchedServer:
 
 @dataclass
 class UpdateSchedule:
-    """Traffic epochs: at each epoch start the road weights change and the
-    index must be rebuilt before fresh answers can be served."""
+    """Traffic epochs: the first weight change lands at ``epoch_ms`` and
+    repeats every ``epoch_ms`` after; each change forces a rebuild before
+    fresh answers can be served.  The interval before the first update
+    (t < epoch_ms) is served from the pre-deployed index and is always
+    fresh — matching ``VariableUpdateSchedule``'s k < 0 behavior (the
+    old code charged a phantom rebuild window in epoch 0, making queries
+    near t=0 wait for a rebuild no traffic update had triggered)."""
     epoch_ms: float
     rebuild_ms_centralized: float
     rebuild_ms_edge_bl: float      # center's BL rebuild
@@ -170,6 +180,8 @@ class UpdateSchedule:
     def fresh_at_centralized(self, t_ms: float) -> float:
         """Earliest time a fresh centralized index is available for t."""
         epoch_start = (t_ms // self.epoch_ms) * self.epoch_ms
+        if epoch_start <= 0.0:      # before the first traffic update
+            return t_ms
         ready = epoch_start + self.rebuild_ms_centralized
         return ready if t_ms < ready else t_ms
 
@@ -178,6 +190,8 @@ class UpdateSchedule:
         local indexes refresh in parallel quickly; the BL (+ shortcut push)
         takes rebuild_ms_edge_bl."""
         epoch_start = (t_ms // self.epoch_ms) * self.epoch_ms
+        if epoch_start <= 0.0:      # before the first traffic update
+            return 0.0, 0.0
         local_ready = epoch_start + self.rebuild_ms_edge_local
         global_ready = epoch_start + self.rebuild_ms_edge_bl
         return local_ready, global_ready

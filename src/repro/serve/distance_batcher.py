@@ -64,13 +64,22 @@ class DistanceBatcher:
     dummies.  For non-service engines the dummies are real (0, 0)
     queries from the engine's point of view, but they never enter
     ``completed`` or the latency statistics.  Engines that already pad
-    internally to bounded shapes can run with ``pad=False``."""
+    internally to bounded shapes can run with ``pad=False``.
+
+    ``max_queue`` bounds the admission queue (load shedding under
+    overload): once that many requests are pending, further ``submit``
+    calls are *dropped* — counted in ``shed_count``, never answered,
+    never part of the latency statistics.  ``None`` (default) admits
+    everything (the historical unbounded queue)."""
 
     def __init__(self, engine: Callable[[np.ndarray, np.ndarray],
                                         np.ndarray],
-                 batch_size: int = 256, pad: bool = True):
+                 batch_size: int = 256, pad: bool = True,
+                 max_queue: int | None = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
         # when ``service`` is set, _run_group dispatches through
         # service.submit with the padding mask; ``engine`` then only
         # keeps the distances-only callable for introspection
@@ -100,17 +109,28 @@ class DistanceBatcher:
                 self.engine = fn
         self.batch_size = batch_size
         self.pad = pad
+        self.max_queue = max_queue
+        self.shed_count = 0
         self.queue: deque[DistanceRequest] = deque()
         self.completed: list[DistanceRequest] = []
 
-    def submit(self, req: DistanceRequest) -> None:
+    def submit(self, req: DistanceRequest) -> bool:
+        """Admit a request; returns False (and counts a shed) when the
+        bounded queue is full."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.shed_count += 1
+            return False
         self.queue.append(req)
+        return True
 
     def submit_pairs(self, pairs: Sequence[tuple[int, int]],
-                     rid_base: int = 0) -> None:
+                     rid_base: int = 0) -> int:
+        """Submit many pairs; returns how many were admitted."""
+        admitted = 0
         for k, (s, t) in enumerate(pairs):
-            self.submit(DistanceRequest(rid=rid_base + k, s=int(s),
-                                        t=int(t)))
+            admitted += self.submit(DistanceRequest(rid=rid_base + k,
+                                                    s=int(s), t=int(t)))
+        return admitted
 
     def _run_group(self, group: list[DistanceRequest]) -> None:
         ss = np.array([r.s for r in group], dtype=np.int64)
@@ -140,13 +160,19 @@ class DistanceBatcher:
         return self.completed
 
     def latency_stats(self) -> dict[str, float]:
-        """Latency percentiles (ms) over completed real requests."""
+        """Latency percentiles (ms) over completed REAL requests —
+        rid=-1 padding dummies never enter ``completed``, so padded tail
+        groups cannot deflate the percentiles; shed requests are counted
+        separately and never measured."""
         lat = np.array([r.latency_s for r in self.completed],
                        dtype=np.float64) * 1e3
         if len(lat) == 0:
-            return {"count": 0, "mean_ms": 0.0, "p50_ms": 0.0,
-                    "p95_ms": 0.0, "p99_ms": 0.0}
-        return {"count": int(len(lat)), "mean_ms": float(lat.mean()),
+            return {"count": 0, "shed": self.shed_count, "mean_ms": 0.0,
+                    "p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0,
+                    "p999_ms": 0.0}
+        return {"count": int(len(lat)), "shed": self.shed_count,
+                "mean_ms": float(lat.mean()),
                 "p50_ms": float(np.percentile(lat, 50)),
                 "p95_ms": float(np.percentile(lat, 95)),
-                "p99_ms": float(np.percentile(lat, 99))}
+                "p99_ms": float(np.percentile(lat, 99)),
+                "p999_ms": float(np.percentile(lat, 99.9))}

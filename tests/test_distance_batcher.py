@@ -117,6 +117,50 @@ def test_distance_batcher_requeue_after_drain():
     assert all(r.rid >= 0 for r in b.completed)
 
 
+def test_distance_batcher_latency_stats_padded_tail():
+    """Percentiles (incl. the new p999) are computed over REAL requests
+    only: a heavily-padded tail group (1 real + 7 dummies) must not
+    deflate the stats, and the shed counter starts at zero."""
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=8)
+    b.submit_pairs([(i, i + 1) for i in range(9)])    # 8 full + 1-real tail
+    done = b.run()
+    assert calls == [(8, 8), (8, 8)]
+    assert len(done) == 9
+    st = b.latency_stats()
+    assert st["count"] == 9 and st["shed"] == 0
+    assert {"p50_ms", "p95_ms", "p99_ms", "p999_ms"} <= st.keys()
+    assert st["p999_ms"] >= st["p99_ms"] >= st["p95_ms"] >= st["p50_ms"] > 0
+    # empty-stats shape carries the same keys (report code indexes them)
+    empty = DistanceBatcher(_echo_engine([]), batch_size=4).latency_stats()
+    assert empty["count"] == 0 and empty["p999_ms"] == 0.0
+    assert empty.keys() == st.keys()
+
+
+def test_distance_batcher_bounded_queue_sheds():
+    """max_queue bounds admission: overflow submits are dropped (False),
+    counted in shed_count / latency_stats()["shed"], and never answered;
+    draining frees capacity for later admissions."""
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=4, max_queue=4)
+    admitted = b.submit_pairs([(i, i) for i in range(10)])
+    assert admitted == 4 and b.shed_count == 6
+    assert len(b.queue) == 4
+    done = b.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    st = b.latency_stats()
+    assert st["count"] == 4 and st["shed"] == 6
+    # queue drained → admission reopens
+    assert b.submit(DistanceRequest(rid=10, s=0, t=0)) is True
+    assert b.shed_count == 6
+
+
+def test_distance_batcher_max_queue_validation():
+    import pytest
+    with pytest.raises(ValueError, match="max_queue"):
+        DistanceBatcher(_echo_engine([]), batch_size=4, max_queue=0)
+
+
 def test_decoder_empty_queue_and_padding():
     cfg = get_smoke_config("qwen3_4b").reduced(num_layers=2)
     params = init_params(cfg, jax.random.PRNGKey(0))

@@ -1,0 +1,212 @@
+"""Open-loop load harness + shared traffic shapes.
+
+The loadgen runs the REAL DistanceService (every batch is dispatched
+through the engine) over a virtual timeline; ``service_ms_override``
+makes the virtual service time deterministic so reports are exactly
+reproducible in tests.
+"""
+import numpy as np
+import pytest
+
+from repro.core import grid_partition, grid_road_network
+from repro.edge import (EdgeSystem, TRAFFIC_SHAPES, arrival_times,
+                        poisson_count, rate_profile)
+from repro.serve import (CERTIFY_OR_WAIT, STALE_OK, OpenLoopLoadGen,
+                         ServingPolicy, close_rebuild_window,
+                         open_rebuild_window)
+from repro.update import scenario_weights
+
+DET = (0.2, 0.001)      # (overhead_ms, per_query_ms) virtual service model
+
+
+@pytest.fixture(scope="module")
+def system():
+    g = grid_road_network(12, 12, seed=11)
+    part = grid_partition(g, 12, 12, 2, 2)
+    return EdgeSystem.deploy(g, part)
+
+
+@pytest.fixture(scope="module")
+def service(system):
+    return system.service(policy=ServingPolicy(rebuild=STALE_OK))
+
+
+# -- traffic shapes ---------------------------------------------------------
+
+def test_arrival_times_sorted_in_horizon_all_shapes():
+    for shape in TRAFFIC_SHAPES:
+        a = arrival_times(3000, 5_000.0, shape=shape, seed=1)
+        assert a.shape == (3000,)
+        assert (np.diff(a) >= 0).all()
+        assert a[0] >= 0.0 and a[-1] <= 5_000.0
+        a2 = arrival_times(3000, 5_000.0, shape=shape, seed=1)
+        np.testing.assert_array_equal(a, a2)
+
+
+def test_rate_profiles_integrate_to_one():
+    frac = np.linspace(0.0, 1.0, 4097)
+    for shape in TRAFFIC_SHAPES:
+        rate = rate_profile(shape, frac)
+        area = np.trapezoid(rate, frac)
+        assert area == pytest.approx(1.0, rel=2e-3)
+    with pytest.raises(ValueError, match="shape"):
+        rate_profile("nope", frac)
+
+
+def test_flash_crowd_concentrates_arrivals():
+    a = arrival_times(50_000, 100.0, shape="flash_crowd", seed=2)
+    burst = np.mean((a >= 45.0) & (a < 55.0))
+    # burst window carries 8x rate over 10% of the horizon ≈ 47% of mass
+    assert burst > 0.35
+    uni = arrival_times(50_000, 100.0, shape="uniform", seed=2)
+    assert np.mean((uni >= 45.0) & (uni < 55.0)) < 0.15
+
+
+def test_poisson_count_matches_mean():
+    rng = np.random.default_rng(0)
+    n = poisson_count(1_000_000, 0.5, 2_000.0, rng=rng)
+    assert abs(n - 1_000_000) < 5_000      # σ = 1000 for mean 1e6
+
+
+# -- loadgen ---------------------------------------------------------------
+
+def test_loadgen_deterministic_and_open_loop(service):
+    gen = OpenLoopLoadGen(service, batch_size=128, window_ms=2.0,
+                          service_ms_override=DET, seed=0)
+    rep = gen.run(10_000, 0.5, 1_000.0)
+    rep2 = OpenLoopLoadGen(service, batch_size=128, window_ms=2.0,
+                           service_ms_override=DET, seed=0
+                           ).run(10_000, 0.5, 1_000.0)
+    assert rep.row() == rep2.row()
+    # open loop: offered is the Poisson draw, independent of service
+    assert rep.offered == pytest.approx(5_000, abs=300)
+    assert rep.admitted == rep.offered and rep.shed == 0
+    assert rep.p50_ms <= rep.p99_ms <= rep.p999_ms <= rep.max_ms
+    # every answer pays at least the edge round trip
+    assert rep.p50_ms >= 2 * gen.latency.client_edge_ms
+    assert rep.engine_calls > 0
+    assert len(rep.latencies_ms) == rep.admitted
+
+
+def test_loadgen_bounded_queue_sheds_under_overload(service):
+    gen = OpenLoopLoadGen(service, batch_size=128, window_ms=2.0,
+                          max_queue=256,
+                          service_ms_override=(5.0, 0.05), seed=1)
+    rep = gen.run(40_000, 0.5, 1_000.0)
+    assert rep.shed > 0 and rep.shed_frac > 0.1
+    assert rep.admitted + rep.shed == rep.offered
+    assert rep.queue_peak <= 256
+    assert rep.goodput_qps < rep.offered_qps
+    # shed requests never enter the latency population
+    assert len(rep.latencies_ms) == rep.admitted
+
+
+def test_loadgen_unbounded_queue_never_sheds(service):
+    gen = OpenLoopLoadGen(service, batch_size=128, window_ms=2.0,
+                          service_ms_override=(5.0, 0.05), seed=1)
+    rep = gen.run(40_000, 0.5, 1_000.0)
+    assert rep.shed == 0 and rep.queue_peak > 256
+
+
+def test_loadgen_traffic_shapes_and_arrival_cap(service):
+    reps = {}
+    for shape in TRAFFIC_SHAPES:
+        gen = OpenLoopLoadGen(service, batch_size=128, window_ms=2.0,
+                              service_ms_override=(1.0, 0.02), seed=3)
+        reps[shape] = gen.run(30_000, 0.5, 1_000.0, shape=shape)
+    # same seed → same Poisson draw; the shape only moves the times
+    offered = {r.offered for r in reps.values()}
+    assert len(offered) == 1
+    # flash crowd bunches arrivals → strictly worse queueing tail
+    assert reps["flash_crowd"].p99_ms > reps["uniform"].p99_ms
+    assert reps["flash_crowd"].queue_peak > reps["uniform"].queue_peak
+    capped = OpenLoopLoadGen(service, batch_size=128,
+                             service_ms_override=DET, seed=3
+                             ).run(30_000, 0.5, 1_000.0, max_arrivals=500)
+    assert capped.offered == 500
+
+
+def test_loadgen_million_clients_tractable(service):
+    """10⁶ clients at a tiny per-client rate: the virtual timeline keeps
+    the engine-call count ~offered/batch, not ~clients."""
+    gen = OpenLoopLoadGen(service, batch_size=1024, window_ms=2.0,
+                          service_ms_override=DET, seed=4)
+    rep = gen.run(1_000_000, 0.01, 1_000.0)     # mean 10k arrivals
+    assert rep.num_clients == 1_000_000
+    assert rep.offered == pytest.approx(10_000, abs=500)
+    assert rep.engine_calls <= rep.offered // 1024 + 2 + int(
+        1_000.0 / 2.0)                           # full + window flushes
+    assert rep.shed == 0
+
+
+def test_loadgen_rebuild_window_policies(system, service):
+    """stale_ok serves through an open rebuild window (stale + certified
+    fractions surface); certify_or_wait never returns a stale answer;
+    closing the window restores all-exact service."""
+    rng = np.random.default_rng(0)
+    w2 = scenario_weights("incident", system.graph, system.partition,
+                          rng, 0.02)
+    open_rebuild_window(system, w2)
+    try:
+        rep = OpenLoopLoadGen(service, batch_size=128,
+                              service_ms_override=DET, seed=5
+                              ).run(4_000, 0.5, 1_000.0)
+        assert rep.stale_frac + rep.certified_frac > 0.0
+        wait_service = system.service(
+            policy=ServingPolicy(rebuild=CERTIFY_OR_WAIT))
+        wrep = OpenLoopLoadGen(wait_service, batch_size=128,
+                               service_ms_override=DET, seed=5
+                               ).run(4_000, 0.5, 1_000.0)
+        assert wrep.stale_frac == 0.0
+    finally:
+        close_rebuild_window(system)
+    rep = OpenLoopLoadGen(service, batch_size=128,
+                          service_ms_override=DET, seed=6
+                          ).run(4_000, 0.5, 1_000.0)
+    assert rep.stale_frac == 0.0 and rep.certified_frac == 0.0
+    assert rep.exact_qps == rep.goodput_qps
+
+
+def test_loadgen_mid_run_window_open(system, service):
+    """update_at_frac opens the window mid-run: answers before the
+    trigger are exact, stale/certified fractions appear after."""
+    gen = OpenLoopLoadGen(service, batch_size=128,
+                          service_ms_override=DET, seed=7)
+    try:
+        rep = gen.run(4_000, 0.5, 1_000.0, update_at_frac=0.5,
+                      scenario="incident", intensity=0.02)
+    finally:
+        close_rebuild_window(system)
+    assert rep.stale_frac + rep.certified_frac > 0.0
+    # only the post-trigger half can be non-exact
+    assert rep.stale_frac + rep.certified_frac < 0.75
+
+
+def test_open_close_rebuild_window_roundtrip(system):
+    """open_ bumps the center version and clears every server's
+    augmented index (window open); close_ installs the shortcuts at the
+    center's version (window shut) and answers match a fresh deploy."""
+    rng = np.random.default_rng(1)
+    w2 = scenario_weights("incident", system.graph, system.partition,
+                          rng, 0.02)
+    open_rebuild_window(system, w2)
+    assert all(srv.augmented is None for srv in system.servers)
+    close_rebuild_window(system)
+    v = system.center.version
+    assert all(srv.augmented_version == v for srv in system.servers)
+    g2 = system.graph
+    fresh = EdgeSystem.deploy(g2, system.partition)
+    sb = np.arange(64) % g2.num_vertices
+    tb = (np.arange(64) * 7 + 3) % g2.num_vertices
+    got = system.service().submit(sb, tb)
+    want = fresh.service().submit(sb, tb)
+    np.testing.assert_allclose(np.asarray(got.distances),
+                               np.asarray(want.distances), rtol=1e-5)
+
+
+def test_loadgen_warmup_touches_no_counters(service):
+    gen = OpenLoopLoadGen(service, batch_size=64, service_ms_override=DET,
+                          seed=8)
+    before = dict(service.stats)
+    gen.warmup()
+    assert dict(service.stats) == before

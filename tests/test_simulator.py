@@ -9,8 +9,8 @@ import pytest
 
 from repro.core import bfs_grow_partition, grid_road_network
 from repro.edge import (BatchPolicy, LatencyModel, SimResult, Topology,
-                        UpdateSchedule, make_trace, simulate_centralized,
-                        simulate_edge)
+                        UpdateSchedule, VariableUpdateSchedule, make_trace,
+                        simulate_centralized, simulate_edge)
 from repro.edge.simulator import _BatchedServer
 
 
@@ -82,6 +82,106 @@ def test_simresult_empty_trace_is_zeroed_without_warnings():
     assert simulate_centralized([], topo, sched).mean_ms == 0.0
     assert simulate_edge([], topo, sched, np.zeros(4, dtype=np.int32),
                          _cert, 2, batch=BatchPolicy()).mean_ms == 0.0
+
+
+def test_schedule_pre_first_update_is_fresh():
+    """No traffic update has happened before t = epoch_ms, so nothing can
+    be rebuilding: queries in [0, epoch_ms) are served fresh with no wait
+    in BOTH schedule flavors (the fixed-rate schedule used to charge a
+    phantom rebuild window in epoch 0)."""
+    sched = _heavy_schedule()
+    for t in (0.0, 1.0, sched.epoch_ms - 1e-6):
+        assert sched.fresh_at_centralized(t) == t
+        assert sched.edge_windows(t) == (0.0, 0.0)
+    # first update lands at epoch_ms: the window opens there
+    t = sched.epoch_ms + 1.0
+    assert sched.fresh_at_centralized(t) == \
+        sched.epoch_ms + sched.rebuild_ms_centralized
+    assert sched.edge_windows(t) == (
+        sched.epoch_ms + sched.rebuild_ms_edge_local,
+        sched.epoch_ms + sched.rebuild_ms_edge_bl)
+
+
+def test_fixed_and_variable_schedules_agree():
+    """UpdateSchedule(epoch_ms, ...) must be the constant-rate special
+    case of VariableUpdateSchedule: same freshness answers at every t,
+    including the pre-first-update interval."""
+    fixed = _heavy_schedule()
+    n_epochs = 6
+    starts = (1.0 + np.arange(n_epochs)) * fixed.epoch_ms
+    var = VariableUpdateSchedule.from_timings(
+        starts,
+        [fixed.rebuild_ms_centralized] * n_epochs,
+        [fixed.rebuild_ms_edge_local] * n_epochs,
+        [fixed.rebuild_ms_edge_bl] * n_epochs,
+        scale=1.0)
+    rng = np.random.default_rng(0)
+    ts = np.concatenate([rng.uniform(0.0, n_epochs * fixed.epoch_ms, 500),
+                         [0.0, fixed.epoch_ms - 1e-9, fixed.epoch_ms,
+                          fixed.epoch_ms + 1e-9]])
+    for t in ts:
+        t = float(t)
+        assert fixed.fresh_at_centralized(t) == \
+            pytest.approx(var.fresh_at_centralized(t))
+        fl, fg = fixed.edge_windows(t)
+        vl, vg = var.edge_windows(t)
+        assert fl == pytest.approx(vl) and fg == pytest.approx(vg)
+
+
+def test_make_trace_shapes_share_endpoint_stream():
+    """Traffic shapes only reshape arrival TIMES: same seed ⇒ identical
+    (s, t) endpoints across shapes, sorted in-horizon times always."""
+    g = grid_road_network(6, 6, seed=3)
+    traces = {shape: make_trace(g, 400, horizon_ms=10_000.0, seed=4,
+                                shape=shape)
+              for shape in ("uniform", "diurnal", "flash_crowd")}
+    base = [(e.s, e.t) for e in traces["uniform"]]
+    for shape, tr in traces.items():
+        assert [(e.s, e.t) for e in tr] == base
+        times = np.array([e.t_ms for e in tr])
+        assert (np.diff(times) >= 0).all()
+        assert times[0] >= 0.0 and times[-1] <= 10_000.0
+    assert [e.t_ms for e in traces["flash_crowd"]] != \
+        [e.t_ms for e in traces["uniform"]]
+
+
+def test_batched_expired_window_flushes_before_admission():
+    """An arrival past the window close must NOT ride the expired batch:
+    the old batch departs at its close time and the arrival seeds a new
+    window (flush-on-expiry ordered before admission, before full-batch
+    check)."""
+    pol = BatchPolicy(batch_size=3, window_ms=2.0, overhead_ms=0.5,
+                      per_query_ms=0.1)
+    srv = _BatchedServer(pol)
+    dep = np.zeros(4, dtype=np.float64)
+    srv.submit(0, 0.0, dep)
+    srv.submit(1, 1.0, dep)
+    srv.submit(2, 5.0, dep)       # 5.0 >= close(2.0): {0,1} flush first
+    done01 = 2.0 + 0.5 + 2 * 0.1
+    assert dep[0] == dep[1] == pytest.approx(done01)
+    assert dep[2] == 0.0                      # seeds the next window
+    # the new window is anchored on 5.0, and 2 more arrivals fill the
+    # batch of 3 → flush-on-full at the third arrival
+    srv.submit(3, 5.5, dep)
+    srv.submit(1, 6.9, dep)       # reuse slot 1 to observe the 2nd batch
+    assert dep[2] == dep[3] == pytest.approx(6.9 + 0.5 + 3 * 0.1)
+
+
+def test_batched_min_ready_resets_after_flush():
+    """The running window anchor must reset at flush: the next batch
+    anchors on its OWN oldest ready time, not the drained batch's."""
+    pol = BatchPolicy(batch_size=100, window_ms=2.0, overhead_ms=0.5,
+                      per_query_ms=0.1)
+    srv = _BatchedServer(pol)
+    dep = np.zeros(2, dtype=np.float64)
+    srv.submit(0, 0.0, dep)
+    srv.submit(1, 10.0, dep)      # expires {0}'s window → {0} flushes
+    assert dep[0] == pytest.approx(2.0 + 0.5 + 0.1)
+    assert srv._min_ready == 10.0          # fresh anchor, not min(0, 10)
+    srv.finish(dep)
+    # stale anchor would close the window at 0+2=2 (clamped by busy);
+    # the correct anchor closes at 10+2=12
+    assert dep[1] == pytest.approx(12.0 + 0.5 + 0.1)
 
 
 def test_batched_window_anchors_on_min_ready():
