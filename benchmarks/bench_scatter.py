@@ -1,0 +1,158 @@
+"""Scatter-gather read path: what retiring the center from rule 3 buys.
+
+Four sections on one deployed grid (8 districts):
+
+1. **Parity gate** — the ``ScatterGatherPlane`` must be bit-for-bit with
+   the scalar loop and both device engines on a mixed-rule batch
+   (asserted, not just reported), and the coordinator must hold no
+   border table (rule-3 bytes live on the servers).
+2. **Plane throughput** — warm full-batch dispatch through the service
+   under ``engine="scatter_gather"`` vs the default placement, plus the
+   plane's resident bytes and the peer-exchange totals the first batch
+   incurred.
+3. **§5 simulator, rule-3 tail** — the same trace through
+   ``simulate_edge`` with cross lanes forwarded through the center
+   (two WAN hops, one shared forwarding agent) vs answered edge-side
+   over the peer link: the cross-lane p99 must drop (asserted).
+4. **10⁶-client open-loop point** — both placements through the real
+   ``DistanceService`` under a deterministic service model
+   (``service_ms_override``), same seed and arrival stream: the only
+   difference is the RTT each cross request is charged
+   (``forward_rtt_ms`` = 130 ms vs ``peer_rtt_ms`` = 26 ms), so the
+   p99 win is the network win (asserted strict).
+
+All sections run under ``--quick``; the committed ``BENCH_PR<N>.json``
+baseline records every row.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from .common import emit, timeit
+
+BATCH = 1024
+MEGA_CLIENTS = 1_000_000
+# deterministic service model for section 4: 0.2 ms batch overhead +
+# 2 us/query — capacity ≈ 455k qps, far above the offered rate, so the
+# p99 difference is pure network RTT, not queueing noise
+SERVICE_MS_OVERRIDE = (0.2, 0.002)
+
+
+def run(quick: bool = False) -> None:
+    from repro.core import grid_partition, grid_road_network
+    from repro.edge import (BatchedQueryEngine, EdgeSystem, LatencyModel,
+                            ShardedBatchedEngine, Topology, UpdateSchedule,
+                            make_trace, simulate_edge)
+    from repro.serve import OpenLoopLoadGen, ServingPolicy
+
+    g = grid_road_network(40, 40, seed=11)
+    part = grid_partition(g, 40, 40, 2, 4)
+    system = EdgeSystem.deploy(g, part)
+    scatter_pol = ServingPolicy(engine="scatter_gather")
+
+    # 1. parity gate ---------------------------------------------------------
+    rng = np.random.default_rng(3)
+    nq = 2048 if quick else 8192
+    ss = rng.integers(0, g.num_vertices, size=nq)
+    ts = rng.integers(0, g.num_vertices, size=nq)
+    ss[::13] = ts[::13]
+    plane = system._current_scatter_plane()
+    got = plane.execute(ss, ts)
+    loop = system.query_loop(ss, ts)
+    np.testing.assert_array_equal(got, loop)
+    btable = system.center.border_labels.table
+    locals_ = [srv.augmented for srv in system.servers]
+    rep_eng = BatchedQueryEngine(btable, locals_, part.assignment)
+    np.testing.assert_array_equal(got, np.asarray(rep_eng.query(ss, ts)))
+    shd_eng = ShardedBatchedEngine(btable, locals_, part.assignment)
+    np.testing.assert_array_equal(got, np.asarray(shd_eng.query(ss, ts)))
+    assert plane.data.btable is None          # center off the read path
+    cross_frac = float((part.assignment[ss] != part.assignment[ts]).mean())
+    emit("scatter/parity", 1.0, unit="info",
+         derived=f"bitwise=loop+replicated+sharded;nq={nq}"
+                 f";cross_frac={cross_frac:.3f}")
+    emit("scatter/exchange-rows", plane.exchange_stats["rows_exchanged"],
+         unit="info",
+         derived=f"exchanges={plane.exchange_stats['exchanges']}"
+                 f";districts={part.num_districts}")
+    emit("scatter/plane-resident-bytes", plane.size_bytes(), unit="bytes",
+         derived=f"coordinator_btable=dropped;n={g.num_vertices}")
+
+    # 2. plane throughput ----------------------------------------------------
+    sb, tb = ss[:BATCH].copy(), ts[:BATCH].copy()
+    scatter_svc = system.service(scatter_pol)
+    default_svc = system.service()
+    scatter_svc.submit(sb, tb)                # warm
+    default_svc.submit(sb, tb)
+    _, sec = timeit(lambda: scatter_svc.submit(sb, tb), repeats=5)
+    emit("scatter/dispatch-scatter", sec / BATCH * 1e6,
+         derived=f"batch={BATCH}", unit="us_per_query")
+    _, sec_d = timeit(lambda: default_svc.submit(sb, tb), repeats=5)
+    emit("scatter/dispatch-default", sec_d / BATCH * 1e6,
+         derived=f"batch={BATCH}", unit="us_per_query")
+
+    # 3. §5 simulator: cross-lane tail, forwarded vs scatter -----------------
+    n_trace = 2000 if quick else 5000
+    trace = make_trace(g, n_trace, horizon_ms=60_000.0, seed=5)
+    topo = Topology(part.num_districts, LatencyModel())
+    schedule = UpdateSchedule(epoch_ms=1e12, rebuild_ms_centralized=1.0,
+                              rebuild_ms_edge_bl=1.0,
+                              rebuild_ms_edge_local=1.0)  # steady state
+    certified = default_svc.certifier()
+    fwd = simulate_edge(trace, topo, schedule, part.assignment, certified,
+                        part.num_districts)
+    sct = simulate_edge(trace, topo, schedule, part.assignment, certified,
+                        part.num_districts, policy=scatter_pol)
+    tss = np.array([ev.s for ev in trace])
+    tts = np.array([ev.t for ev in trace])
+    cross = part.assignment[tss] != part.assignment[tts]
+    fwd_p99 = float(np.percentile(fwd.latencies_ms[cross], 99))
+    sct_p99 = float(np.percentile(sct.latencies_ms[cross], 99))
+    assert sct_p99 < fwd_p99, (
+        f"scatter rule-3 p99 {sct_p99:.2f}ms not below forwarded "
+        f"{fwd_p99:.2f}ms")
+    emit("scatter/sim-rule3-p99-forwarded", fwd_p99, unit="ms",
+         derived=f"mean={fwd.latencies_ms[cross].mean():.2f}ms"
+                 f";cross_n={int(cross.sum())}")
+    emit("scatter/sim-rule3-p99-scatter", sct_p99, unit="ms",
+         derived=f"mean={sct.latencies_ms[cross].mean():.2f}ms"
+                 f";win={fwd_p99 - sct_p99:.2f}ms")
+
+    # 4. 10⁶-client open-loop point ------------------------------------------
+    # offered ≈ 350k qps over a 3 s horizon ⇒ ≈ 1.05e6 arrivals; both runs
+    # share the seed so the arrival stream and (s, t) draws are identical
+    per_client = 0.35
+    horizon_ms = 3_000.0
+    reps = {}
+    for tag, svc in (("forwarded", default_svc), ("scatter", scatter_svc)):
+        gen = OpenLoopLoadGen(svc, batch_size=BATCH,
+                              service_ms_override=SERVICE_MS_OVERRIDE,
+                              seed=0)
+        gen.warmup()
+        rep = gen.run(MEGA_CLIENTS, per_client, horizon_ms,
+                      max_arrivals=4_000_000)
+        assert rep.offered >= MEGA_CLIENTS, (
+            f"mega point offered only {rep.offered:,} arrivals")
+        reps[tag] = rep
+        emit(f"scatter/mega-1m-{tag}-p99", rep.p99_ms, unit="ms",
+             derived=f"p50={rep.p50_ms:.2f}ms;p999={rep.p999_ms:.2f}ms"
+                     f";offered={rep.offered:,}"
+                     f";goodput_qps={rep.goodput_qps:,.0f}",
+             config=rep.row())
+    assert reps["scatter"].p99_ms < reps["forwarded"].p99_ms, (
+        f"scatter p99 {reps['scatter'].p99_ms:.2f}ms not strictly below "
+        f"forwarded {reps['forwarded'].p99_ms:.2f}ms at the 1M point")
+    emit("scatter/mega-1m-p99-win",
+         reps["forwarded"].p99_ms - reps["scatter"].p99_ms, unit="ms",
+         derived=f"clients={MEGA_CLIENTS:,}"
+                 f";rtt_cross=130->26ms")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep for CI smoke (keeps the parity "
+                         "gate and the million-client point)")
+    run(quick=ap.parse_args().quick)

@@ -6,6 +6,7 @@ from .center import ComputingCenter
 from .server import EdgeServer
 from .router import EdgeSystem
 from .engine import BatchedQueryEngine, ShardedBatchedEngine
+from .scatter_gather import ScatterGatherPlane
 from .simulator import (BatchPolicy, QueryEvent, SimResult, UpdateSchedule,
                         VariableUpdateSchedule, make_trace,
                         run_update_epochs, simulate_centralized,

@@ -5,26 +5,26 @@ version-aware.
 event simulator adds time on top; the sharded_oracle maps the same logic
 onto a device mesh).  The request plane — §4.2 routing, typed results,
 rebuild-window policy — lives in ``repro.serve.service``; get a front
-door with ``EdgeSystem.service()``.  The historical entry points
-``query`` / ``query_batched`` / ``query_many`` remain as deprecated
-shims over that service (same signatures, same answers, same
-``stats`` side effects).
+door with ``EdgeSystem.service()``.  (The historical entry points
+``query`` / ``query_batched`` / ``query_many`` were deprecated shims
+for two PRs and are now removed.)
 
 Paper map: the service planes implement the §4.2 query rules (rule 1
 same-district local, rule 2 same-district via another client's server,
-rule 3 cross-district through the border table B at the computing
-center); during a rebuild window (center pushed a new index version,
-shortcuts not yet installed) answers are served from the stale L_i under
-the Theorem-3 rebuild-window certificate (λ ≤ Local Bound ⇒ still
-exact), and the uncertified residue is resolved per the policy's
-rebuild mode.  ``_current_engine`` snapshots one index version into a
-batched serving engine and swaps it — including the device-resident B
-shards — whenever the center's version moves (see
-docs/ARCHITECTURE.md).
+rule 3 cross-district through the border table B — answered at the
+computing center by the engine planes, or entirely edge-side by the
+scatter-gather plane's peer border-row exchange); during a rebuild
+window (center pushed a new index version, shortcuts not yet installed)
+answers are served from the stale L_i under the Theorem-3
+rebuild-window certificate (λ ≤ Local Bound ⇒ still exact), and the
+uncertified residue is resolved per the policy's rebuild mode.
+``_current_engine`` snapshots one index version into a batched serving
+engine and swaps it — including the device-resident B shards — whenever
+the center's version moves; ``_current_scatter_plane`` does the same
+for the coordinator plane (see docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
 
@@ -32,7 +32,6 @@ import numpy as np
 
 from ..core.graph import Graph
 from ..core.partition import Partition
-from ..core.query import Rule
 from .center import ComputingCenter
 from .server import EdgeServer
 
@@ -69,6 +68,9 @@ class EdgeSystem:
     # steady-state serving engine, snapshot of one index version
     _engine: object | None = field(default=None, repr=False)
     _engine_key: tuple | None = field(default=None, repr=False)
+    # scatter-gather coordinator plane, same snapshot discipline
+    _scatter: object | None = field(default=None, repr=False)
+    _scatter_key: tuple | None = field(default=None, repr=False)
 
     @classmethod
     def deploy(cls, g: Graph, part: Partition,
@@ -159,41 +161,6 @@ class EdgeSystem:
         for k, v in counters.items():
             self.stats[k] += v
 
-    def query(self, s: int, t: int, client_district: int | None = None
-              ) -> tuple[float, Rule]:
-        """Deprecated shim — use ``service().query(s, t)`` (returns a
-        typed ``QueryResult`` instead of a bare tuple)."""
-        warnings.warn(
-            "EdgeSystem.query is deprecated; use "
-            "EdgeSystem.service().query(s, t) instead",
-            DeprecationWarning, stacklevel=2)
-        svc = self.service()
-        res = svc.query(int(s), int(t), client_district)
-        self._merge_stats(svc.stats)
-        return res.distance, res.rule
-
-    def query_batched(self, ss: np.ndarray, ts: np.ndarray,
-                      client_districts: np.ndarray | None = None,
-                      use_kernels: bool = True) -> np.ndarray:
-        """Deprecated shim — use ``service().submit(ss, ts).distances``
-        (``ServingPolicy(use_kernels=...)`` replaces the keyword).  Same
-        answers, same ``install_now`` side effects, same ``stats``
-        counting as the historical in-place implementation."""
-        warnings.warn(
-            "EdgeSystem.query_batched is deprecated; use "
-            "EdgeSystem.service().submit(ss, ts).distances instead",
-            DeprecationWarning, stacklevel=2)
-        return self._query_batched_via_service(ss, ts, client_districts,
-                                               use_kernels)
-
-    def _query_batched_via_service(self, ss, ts, client_districts=None,
-                                   use_kernels=True) -> np.ndarray:
-        from ..serve.service import ServingPolicy
-        svc = self.service(ServingPolicy(use_kernels=use_kernels))
-        out = svc.submit(ss, ts, client_districts=client_districts).distances
-        self._merge_stats(svc.stats)
-        return out
-
     def _current_engine(self, prefer_sharded=_SELF, shard_border=_SELF):
         """Engine snapshot for the current index version, or None while
         any district's shortcuts are stale (rebuild window). Single-device
@@ -251,17 +218,25 @@ class EdgeSystem:
         ``size_bytes()`` footprint."""
         return self._current_engine()
 
-    def query_many(self, ss: np.ndarray, ts: np.ndarray,
-                   client_districts: np.ndarray | None = None,
-                   use_kernels: bool = True) -> np.ndarray:
-        """Deprecated alias of ``query_batched`` — use
-        ``service().submit(ss, ts).distances``."""
-        warnings.warn(
-            "EdgeSystem.query_many is deprecated; use "
-            "EdgeSystem.service().submit(ss, ts).distances instead",
-            DeprecationWarning, stacklevel=2)
-        return self._query_batched_via_service(ss, ts, client_districts,
-                                               use_kernels)
+    def _current_scatter_plane(self):
+        """Scatter-gather coordinator plane for the current index
+        version, or None during a rebuild window (same freshness rule as
+        ``_current_engine``).  Building the plane pushes each server its
+        own district's B rows; peer exchanges then run lazily per batch
+        and persist on the servers across plane rebuilds of the same
+        version."""
+        if any(srv.augmented is None
+               or srv.augmented_version != self.center.version
+               for srv in self.servers):
+            return None
+        key = (self.center.version,
+               tuple(srv.augmented_version for srv in self.servers))
+        if self._scatter is None or self._scatter_key != key:
+            from .scatter_gather import ScatterGatherPlane
+            self._scatter = None
+            self._scatter = ScatterGatherPlane.from_system(self)
+            self._scatter_key = key
+        return self._scatter
 
     def query_loop(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
         """Per-query Python reference path (parity + benchmark baseline);

@@ -1,0 +1,202 @@
+"""Scatter-gather read path: cross-edge serving with the center retired.
+
+The engines in ``edge/engine.py`` model the deployment as one device
+mesh; this module models it as the paper's §4 *network* — m autonomous
+edge servers and a coordinator — while answering bit-for-bit the same
+distances.  A mixed-rule batch is split by the coordinator into one
+partial query per district (the EdgeLake remote/local query rewriting,
+SNIPPETS.md #1):
+
+* rule 1/2 lanes go to the district's own server, which joins over its
+  hub-aligned L_i⁺ block;
+* rule 3 lanes go to the *source* district's server, which joins the
+  source vertex's own B row against the target vertex's B row — a row it
+  obtained from the target district's server through the peer-to-peer
+  border-row exchange (``EdgeServer.exchange_border_rows``), never from
+  the center.  The §4.2 rule-3 identity ``d(s,t) = min_b B[s,b] +
+  B[t,b]`` needs nothing else, so the computing center leaves the read
+  path entirely: it builds B and pushes each district its slice
+  (``ComputingCenter.border_rows_for``), then every query is answered
+  edge-side over ``peer_edge_ms`` links instead of two WAN hops.
+
+Each server's partial is a full-batch vector holding its answers on the
+lanes it owns and +inf elsewhere; the coordinator consolidates with ONE
+element-wise min over the m partials — MIN-of-MINs, the host-side
+analogue of the sharded engine's ``pmin``.  Because every lane is owned
+by exactly one server, the rows each partial joins are identical to the
+rows the sharded engine's owning device joins (same ``pack_tables``
+densify, same natural-width-q border rows inf-padded to W, same
+``label_join`` kernel), so the plane is bit-for-bit with
+``ShardedBatchedEngine`` — pinned in ``tests/test_scatter_gather.py``
+on 1 and 8 virtual devices.
+
+The plane implements the ``QueryPlane`` protocol; select it with
+``ServingPolicy(engine="scatter_gather")``.  Latency consequences are
+modeled in ``edge/simulator.py`` and ``serve/loadgen.py`` (cross-district
+requests pay ``Topology.peer_rtt_ms()`` instead of ``forward_rtt_ms()``)
+and measured in ``benchmarks/bench_scatter.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+import jax
+import numpy as np
+
+from ..core.local_index import LocalIndex
+from ..kernels.label_join import ops as lj
+from .server import EdgeServer
+from .sharded_oracle import pack_tables, prepare_queries
+
+if TYPE_CHECKING:                                   # pragma: no cover
+    from .router import EdgeSystem
+
+INF = np.float32(np.inf)
+
+
+@dataclass
+class ScatterGatherPlane:
+    """Coordinator + per-district partial execution over the servers'
+    own label stores.  A snapshot of one index version, like the
+    engines; the router rebuilds it when the center's version moves."""
+    servers: list[EdgeServer]
+    version: int
+    use_pallas: bool
+    data: object                        # ShardedOracleData, num_devices=m
+    border_width: int
+    # per-server dense view of the border rows it holds, scattered in as
+    # slices arrive (own push + peer exchanges); lazily allocated so
+    # servers that never see a cross lane hold no B bytes at all
+    _bviews: list[np.ndarray | None] = field(repr=False)
+    _held: list[set] = field(repr=False)
+    exchange_stats: dict = field(default_factory=lambda: {
+        "exchanges": 0, "rows_exchanged": 0})
+
+    @classmethod
+    def from_system(cls, system: "EdgeSystem",
+                    use_pallas: bool | None = None) -> "ScatterGatherPlane":
+        """Build from a deployed system: the center pushes each server
+        its own district's B rows (the build-path role it keeps), then
+        the coordinator packs the same blocked layout the sharded engine
+        uses — one 'device' per district, so the routing pass emits
+        per-district row coordinates directly."""
+        center = system.center
+        version = center.version
+        for srv in system.servers:
+            if not srv.has_border_rows(srv.district_id, version):
+                verts, rows = center.border_rows_for(srv.district_id)
+                srv.install_border_rows(verts, rows, version)
+        return cls.build(center.border_labels.table,
+                         [srv.augmented for srv in system.servers],
+                         system.partition.assignment, system.servers,
+                         version, use_pallas=use_pallas)
+
+    @classmethod
+    def build(cls, btable: np.ndarray, locals_: list[LocalIndex],
+              assignment: np.ndarray, servers: list[EdgeServer],
+              version: int,
+              use_pallas: bool | None = None) -> "ScatterGatherPlane":
+        m = len(locals_)
+        data = pack_tables(btable, locals_, assignment, num_devices=m)
+        q = data.border_width
+        # the coordinator holds NO border rows — rule-3 gathers read the
+        # servers' exchanged stores, so drop the packed full-B copy
+        data.btable = None
+        return cls(servers, version,
+                   (jax.default_backend() != "cpu"
+                    if use_pallas is None else use_pallas),
+                   data, q, [None] * m, [set() for _ in range(m)])
+
+    # -- border-row assembly -------------------------------------------------
+
+    def _bview(self, d: int) -> np.ndarray:
+        if self._bviews[d] is None:
+            self._bviews[d] = np.full(
+                (self.data.num_vertices, self.border_width), INF,
+                dtype=np.float32)
+        return self._bviews[d]
+
+    def _ensure_rows(self, d: int, districts: np.ndarray) -> None:
+        """Make sure server ``d`` holds the B rows of every district in
+        ``districts``, running peer exchanges for the ones it lacks."""
+        srv = self.servers[d]
+        held = self._held[d]
+        for j in np.unique(districts):
+            j = int(j)
+            if j in held:
+                continue
+            if j != d:
+                moved = srv.exchange_border_rows(self.servers[j])
+                if moved:
+                    self.exchange_stats["exchanges"] += 1
+                    self.exchange_stats["rows_exchanged"] += moved
+            verts, rows = srv.border_rows_of(j)
+            self._bview(d)[verts] = rows
+            held.add(j)
+
+    def _gather(self, d: int, rows: np.ndarray) -> np.ndarray:
+        """Assemble server ``d``'s (batch, W) join rows: district-block
+        rows for local row ids, held border rows (inf-padded from the
+        natural width q to W) for the rest — the same per-batch padding
+        ``join_sharded_gathered`` applies on device."""
+        kmax = self.data.kmax
+        width = self.data.width
+        block = self.data.district_table[d * kmax:(d + 1) * kmax]
+        local = rows < kmax
+        out = np.empty((len(rows), width), dtype=np.float32)
+        out[local] = block[rows[local]]
+        cross = ~local
+        if cross.any():
+            gid = rows[cross] - kmax
+            padded = np.full((int(cross.sum()), width), INF,
+                             dtype=np.float32)
+            padded[:, :self.border_width] = self._bview(d)[gid]
+            out[cross] = padded
+        return out
+
+    # -- QueryPlane ----------------------------------------------------------
+
+    def execute(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        """Scatter the batch into per-district partials, consolidate
+        with one MIN-of-MINs."""
+        ss = np.asarray(ss, dtype=np.int64)
+        ts = np.asarray(ts, dtype=np.int64)
+        qn = len(ss)
+        if qn == 0:
+            return np.zeros(0, dtype=np.float32)
+        coords = prepare_queries(self.data, ss, ts)
+        owner, rs, rt = coords["owner"], coords["rs"], coords["rt"]
+        kmax = self.data.kmax
+        partials = []
+        for d in np.unique(owner):
+            d = int(d)
+            sel = np.nonzero(owner == d)[0]
+            rs_d, rt_d = rs[sel], rt[sel]
+            cross_t = rt_d >= kmax
+            if cross_t.any():
+                # a cross lane reads the server's OWN B row on the
+                # s-side and the peer district's on the t-side
+                self._ensure_rows(d, np.append(
+                    self.data.assignment[rt_d[cross_t] - kmax], d))
+            vals = lj.join_partial_gathered(
+                self._gather(d, rs_d), self._gather(d, rt_d),
+                use_pallas=self.use_pallas)
+            partial = np.full(qn, INF, dtype=np.float32)
+            partial[sel] = vals
+            partials.append(partial)
+        return np.minimum.reduce(partials)
+
+    query = execute
+    __call__ = execute
+
+    # -- accounting ----------------------------------------------------------
+
+    def size_bytes(self) -> int:
+        """Host-resident bytes across the coordinator + servers: the
+        blocked district tables plus every allocated border-row view."""
+        total = int(self.data.district_table.size * 4)
+        for view in self._bviews:
+            if view is not None:
+                total += int(view.size * 4)
+        return total

@@ -332,20 +332,26 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
     ``policy`` (a ``repro.serve.ServingPolicy``) drives both knobs from
     the same config the functional service uses: ``policy.batch``
     supplies the micro-batching discipline when ``batch`` is not given,
-    and ``policy.rebuild == "stale_ok"`` switches the rebuild-window
+    ``policy.rebuild == "stale_ok"`` switches the rebuild-window
     discipline from wait-for-push to serve-stale-immediately (uncertified
     window queries are answered from the stale index with no wait and
     counted in ``SimResult.stale_frac``; the ``install_now`` and
     ``certify_or_wait`` modes both charge the wait — functionally they
-    only differ in who pays for the install).
+    only differ in who pays for the install), and ``policy.engine ==
+    "scatter_gather"`` routes rule-3 queries to the SOURCE district's
+    edge server over the ``peer_edge_ms`` link (peer border-row
+    exchange) instead of forwarding through the center's WAN hops —
+    the center leaves the read path, so cross-district load also stops
+    queueing at one shared server.
     """
     stale_ok = policy is not None and policy.rebuild == "stale_ok"
+    scatter = policy is not None and policy.engine == "scatter_gather"
     if batch is None and policy is not None:
         batch = policy.batch
     if batch is not None:
         return _simulate_edge_batched(trace, topo, schedule, assignment,
                                       certified_fn, num_districts, batch,
-                                      stale_ok=stale_ok)
+                                      stale_ok=stale_ok, scatter=scatter)
     edge_servers = [_Server(topo.latency.edge_service_ms)
                     for _ in range(num_districts)]
     center = _Server(topo.latency.center_service_ms)
@@ -378,6 +384,20 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
             waited += 1
             done = edge_servers[ds].serve(max(arrive, global_ready))
             lat[i] = done + lm.client_edge_ms - ev.t_ms
+        elif scatter:
+            # peer border-row exchange: one metro hop to fetch B[t] from
+            # the target district's server, answered at the OWN server
+            # (exchanged rows come from the same B rebuild, so the
+            # freshness window is unchanged)
+            arrive = ev.t_ms + lm.client_edge_ms + lm.peer_edge_ms
+            if arrive < global_ready:
+                if stale_ok:
+                    stale_n += 1
+                else:
+                    waited += 1
+                    arrive = global_ready
+            done = edge_servers[ds].serve(arrive)
+            lat[i] = done + lm.peer_edge_ms + lm.client_edge_ms - ev.t_ms
         else:
             arrive = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
             if arrive < global_ready:
@@ -398,10 +418,13 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                            schedule: UpdateSchedule, assignment: np.ndarray,
                            certified_fn, num_districts: int,
                            batch: BatchPolicy,
-                           stale_ok: bool = False) -> SimResult:
+                           stale_ok: bool = False,
+                           scatter: bool = False) -> SimResult:
     """§4.2 routing with micro-batched service at every server: same
     freshness rules as the per-query path, but departures are assigned at
-    batch flush time (see _BatchedServer)."""
+    batch flush time (see _BatchedServer).  ``scatter`` routes rule-3
+    lanes to the source district's server over the peer link (see
+    simulate_edge)."""
     edge_servers = [_BatchedServer(batch) for _ in range(num_districts)]
     center = _BatchedServer(batch)
     departures = np.empty(len(trace), dtype=np.float64)
@@ -431,6 +454,16 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
             waited += 1
             edge_servers[ds].submit(i, max(arrive, global_ready),
                                     departures)
+        elif scatter:
+            arrive = ev.t_ms + lm.client_edge_ms + lm.peer_edge_ms
+            back_ms[i] = lm.peer_edge_ms + lm.client_edge_ms
+            if arrive < global_ready:
+                if stale_ok:
+                    stale_n += 1
+                else:
+                    waited += 1
+                    arrive = global_ready
+            edge_servers[ds].submit(i, arrive, departures)
         else:
             arrive = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
             back_ms[i] = lm.edge_center_ms + lm.client_edge_ms

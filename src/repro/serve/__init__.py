@@ -5,7 +5,7 @@ lives in models.lm; the sharded cache rules in distributed.sharding)."""
 from .batcher import BatchedDecoder, Request
 from .distance_batcher import DistanceBatcher, DistanceRequest
 from .loadgen import (LoadReport, OpenLoopLoadGen, close_rebuild_window,
-                      open_rebuild_window)
+                      open_rebuild_window, request_rtt_ms)
 from .service import (CERTIFIED_STALE, CERTIFY_OR_WAIT, EXACT, INSTALL_NOW,
                       REBUILD_MODES, STALE, STALE_OK, BucketedPlane,
                       DistanceService, QueryPlan, QueryPlane, QueryRequest,
@@ -15,7 +15,7 @@ from .service import (CERTIFIED_STALE, CERTIFY_OR_WAIT, EXACT, INSTALL_NOW,
 __all__ = ["BatchedDecoder", "Request", "DistanceBatcher",
            "DistanceRequest", "DistanceService", "ServingPolicy",
            "LoadReport", "OpenLoopLoadGen", "open_rebuild_window",
-           "close_rebuild_window",
+           "close_rebuild_window", "request_rtt_ms",
            "QueryPlane", "QueryPlan", "QueryRequest", "QueryResult",
            "ResultBatch", "BucketedPlane", "ScalarLoopPlane",
            "INSTALL_NOW", "CERTIFY_OR_WAIT", "STALE_OK", "REBUILD_MODES",

@@ -20,8 +20,11 @@ The harness
   the padding masked out of the service counters — and charges the
   *measured* wall-clock of each dispatch as that batch's virtual
   service time.  Queue-delay-inclusive latency per request is
-  ``batch_departure − arrival + network RTT`` (cross-district requests
-  pay the §4.1 center round trip);
+  ``batch_departure − arrival + network RTT``, with the RTT drawn from
+  the §4.1 ``Topology`` helpers (``request_rtt_ms``): cross-district
+  requests pay the two-WAN-hop forwarded round trip — or only the
+  metro peer link when the service's policy selects the scatter-gather
+  plane;
 * sheds load under overload when ``max_queue`` is set: an arrival that
   finds that many requests already waiting is dropped (the bounded-
   queue drop policy — goodput holds at capacity while p99 of admitted
@@ -45,12 +48,27 @@ from typing import TYPE_CHECKING
 
 import numpy as np
 
-from ..edge.topology import LatencyModel
+from ..edge.topology import LatencyModel, Topology
 from ..edge.traffic import arrival_times, poisson_count
 
 if TYPE_CHECKING:                                   # pragma: no cover
     from ..edge.router import EdgeSystem
     from .service import DistanceService
+
+
+def request_rtt_ms(topo: Topology, cross: np.ndarray,
+                   scatter: bool = False) -> np.ndarray:
+    """Per-request network RTT from the §4.1 ``Topology`` helpers:
+    same-district requests pay the 5G edge round trip; cross-district
+    requests pay two WAN hops through the center's forwarding agent
+    (``forward_rtt_ms``) — or only the metro peer link
+    (``peer_rtt_ms``) when the scatter-gather plane answers them
+    edge-side.  All RTT math routes through here so a new path slots in
+    uniformly (the old inline constants under-charged the forwarded
+    path by one WAN round trip)."""
+    cross_rtt = topo.peer_rtt_ms() if scatter else topo.forward_rtt_ms()
+    return np.where(np.asarray(cross, dtype=bool),
+                    cross_rtt, topo.edge_rtt_ms())
 
 
 def open_rebuild_window(system: "EdgeSystem",
@@ -165,9 +183,10 @@ class OpenLoopLoadGen:
         ts = self.rng.integers(0, n_vertices, size=offered)
         assignment = system.partition.assignment
         cross = assignment[ss] != assignment[ts]
-        lm = self.latency
-        rtt = np.where(cross, 2.0 * (lm.client_edge_ms + lm.edge_center_ms),
-                       2.0 * lm.client_edge_ms)
+        topo = Topology(system.partition.num_districts, self.latency)
+        rtt = request_rtt_ms(
+            topo, cross,
+            scatter=self.service.policy.engine == "scatter_gather")
 
         update_at_ms = (None if update_at_frac is None
                         else float(update_at_frac) * horizon_ms)

@@ -76,7 +76,7 @@ CERTIFIED_STALE = "certified_stale"
 STALE = "stale"
 _EXACTNESS = (EXACT, CERTIFIED_STALE, STALE)
 
-ENGINE_PLACEMENTS = ("auto", "replicated", "sharded")
+ENGINE_PLACEMENTS = ("auto", "replicated", "sharded", "scatter_gather")
 
 _COUNTER_KEYS = ("rule1", "rule2", "rule3", "lb_certified",
                  "lb_fallback_attempts")
@@ -92,7 +92,10 @@ class ServingPolicy:
 
     ``engine`` picks the steady-state plane placement: ``"auto"``
     (defer to the system's override attributes, then the device-count
-    heuristic), ``"replicated"``, or ``"sharded"``.  ``shard_border``
+    heuristic), ``"replicated"``, ``"sharded"``, or ``"scatter_gather"``
+    (the coordinator plane of ``edge.scatter_gather`` — cross-district
+    lanes answered edge-side via peer border-row exchange, bit-for-bit
+    with the engines).  ``shard_border``
     picks the border-table placement inside the sharded engine (None =
     defer to the system override / byte-size heuristic).  ``batch``
     carries the micro-batching discipline (a simulator ``BatchPolicy``)
@@ -436,12 +439,15 @@ class DistanceService:
                self.system.prefer_sharded, self.system.shard_border)
         if self._plane_cache is not None and self._plane_cache[0] == key:
             return self._plane_cache[1]
-        prefer = {"auto": self.system.prefer_sharded,
-                  "replicated": False, "sharded": True}[p.engine]
-        border = (self.system.shard_border if p.shard_border is None
-                  else p.shard_border)
-        engine = self.system._current_engine(prefer_sharded=prefer,
-                                             shard_border=border)
+        if p.engine == "scatter_gather":
+            engine = self.system._current_scatter_plane()
+        else:
+            prefer = {"auto": self.system.prefer_sharded,
+                      "replicated": False, "sharded": True}[p.engine]
+            border = (self.system.shard_border if p.shard_border is None
+                      else p.shard_border)
+            engine = self.system._current_engine(prefer_sharded=prefer,
+                                                 shard_border=border)
         if engine is not None:
             self._plane_cache = (key, engine)
         return engine

@@ -1,0 +1,249 @@
+"""Scatter-gather read path: the coordinator plane of
+``repro.edge.scatter_gather`` must be bit-for-bit with the device
+engines on mixed-rule batches, answer rule-3 lanes from peer-exchanged
+border rows (center off the read path), fall back to the bucketed plane
+mid-window, and survive a traffic-update plane swap.  The mesh case at
+the bottom reruns the parity block on however many devices the backend
+exposes (8 in the tier1-mesh8 CI job and the subprocess runner)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import bfs_grow_partition, grid_road_network, perturb_weights
+from repro.edge import (BatchedQueryEngine, EdgeSystem, ScatterGatherPlane,
+                        ShardedBatchedEngine)
+from repro.serve import (BucketedPlane, QueryPlane, ServingPolicy,
+                         close_rebuild_window, open_rebuild_window)
+
+SCATTER = ServingPolicy(engine="scatter_gather")
+
+
+@pytest.fixture(scope="module")
+def system():
+    g = grid_road_network(10, 10, seed=5)
+    part = bfs_grow_partition(g, 8, seed=1)
+    return g, part, EdgeSystem.deploy(g, part)
+
+
+def _batch(g, rng, size=512):
+    ss = rng.integers(0, g.num_vertices, size=size)
+    ts = rng.integers(0, g.num_vertices, size=size)
+    ss[::17] = ts[::17]                               # s == t lanes
+    return ss, ts
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit parity
+# ---------------------------------------------------------------------------
+
+def test_plane_parity_with_engines_and_loop(system):
+    """Same float32 bits as the scalar loop AND both device engines on a
+    mixed-rule batch — the multi_layer_refactor acceptance bar."""
+    g, part, sys_ = system
+    rng = np.random.default_rng(7)
+    ss, ts = _batch(g, rng)
+    plane = sys_._current_scatter_plane()
+    assert isinstance(plane, ScatterGatherPlane)
+    assert isinstance(plane, QueryPlane)          # protocol conformance
+    got = plane.execute(ss, ts)
+    assert got.dtype == np.float32
+    np.testing.assert_array_equal(got, sys_.query_loop(ss, ts))
+    btable = sys_.center.border_labels.table
+    locals_ = [srv.augmented for srv in sys_.servers]
+    rep = BatchedQueryEngine(btable, locals_, part.assignment)
+    np.testing.assert_array_equal(got, np.asarray(rep.query(ss, ts)))
+    shd = ShardedBatchedEngine(btable, locals_, part.assignment)
+    np.testing.assert_array_equal(got, np.asarray(shd.query(ss, ts)))
+    shd_b = ShardedBatchedEngine(btable, locals_, part.assignment,
+                                 shard_border=True)
+    np.testing.assert_array_equal(got, np.asarray(shd_b.query(ss, ts)))
+
+
+def test_service_placement_selects_plane(system):
+    """ServingPolicy(engine="scatter_gather") routes submits through the
+    plane and stays bit-for-bit with the default placement."""
+    g, part, sys_ = system
+    rng = np.random.default_rng(11)
+    ss, ts = _batch(g, rng, size=384)
+    svc = sys_.service(SCATTER)
+    plan = svc.plan(ss, ts)
+    assert isinstance(plan.plane, ScatterGatherPlane)
+    np.testing.assert_array_equal(svc.submit(ss, ts).distances,
+                                  sys_.service().submit(ss, ts).distances)
+    # steady-state plane: every result exact, no window metadata
+    assert svc.submit(ss, ts).exact.all()
+
+
+def test_plane_cached_per_version(system):
+    g, part, sys_ = system
+    assert sys_._current_scatter_plane() is sys_._current_scatter_plane()
+
+
+def test_empty_and_single_lane_batches(system):
+    g, part, sys_ = system
+    plane = sys_._current_scatter_plane()
+    assert plane.execute(np.zeros(0, np.int64), np.zeros(0, np.int64)
+                         ).shape == (0,)
+    np.testing.assert_array_equal(
+        plane.execute(np.array([3]), np.array([3])),
+        np.zeros(1, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# peer border-row exchange
+# ---------------------------------------------------------------------------
+
+def test_exchange_border_rows_contract(system):
+    """Counts rows on first pull, is a no-op when cached, and refuses
+    cross-version exchanges."""
+    g, part, sys_ = system
+    sys_._current_scatter_plane()         # center pushed own slices
+    a, b = sys_.servers[0], sys_.servers[1]
+    a._border_rows.pop(b.district_id, None)   # forget any earlier pull
+    n_b = int((part.assignment == np.int32(b.district_id)).sum())
+    assert a.exchange_border_rows(b) == n_b
+    assert a.exchange_border_rows(b) == 0             # cached now
+    verts, rows = a.border_rows_of(b.district_id)
+    assert len(verts) == n_b and rows.shape[0] == n_b
+    np.testing.assert_array_equal(
+        rows, sys_.center.border_labels.table[verts])
+    old = b.border_rows_version
+    b.border_rows_version = old + 999
+    try:
+        with pytest.raises(ValueError, match="version mismatch"):
+            a.exchange_border_rows(b)
+    finally:
+        b.border_rows_version = old
+
+
+def test_exchange_stats_and_server_side_persistence(system):
+    """A batch's cross lanes trigger exchanges once; replays hit the
+    plane's held-set, and a REBUILT plane of the same version finds the
+    rows already on the servers (rows_exchanged stays 0)."""
+    g, part, sys_ = system
+    rng = np.random.default_rng(13)
+    ss, ts = _batch(g, rng)
+    assert (part.assignment[ss] != part.assignment[ts]).any()
+    plane = ScatterGatherPlane.from_system(sys_)
+    # servers may hold peer rows from earlier tests — scrub to measure
+    for srv in sys_.servers:
+        own = srv._border_rows[srv.district_id]
+        srv._border_rows = {srv.district_id: own}
+    expected = plane.execute(ss, ts)
+    first = dict(plane.exchange_stats)
+    assert first["exchanges"] > 0 and first["rows_exchanged"] > 0
+    np.testing.assert_array_equal(plane.execute(ss, ts), expected)
+    assert plane.exchange_stats == first              # held-set replay
+    plane2 = ScatterGatherPlane.from_system(sys_)
+    np.testing.assert_array_equal(plane2.execute(ss, ts), expected)
+    assert plane2.exchange_stats["rows_exchanged"] == 0
+
+
+def test_coordinator_holds_no_border_table(system):
+    """The center is off the read path: the packed full-B copy is
+    dropped at build time and rule-3 bytes live on the servers."""
+    g, part, sys_ = system
+    plane = sys_._current_scatter_plane()
+    assert plane.data.btable is None
+    base = plane.size_bytes()
+    assert base >= plane.data.district_table.size * 4
+    rng = np.random.default_rng(17)
+    ss, ts = _batch(g, rng)
+    plane.execute(ss, ts)
+    assert plane.size_bytes() >= base        # bviews allocate lazily
+
+
+# ---------------------------------------------------------------------------
+# rebuild windows and updates
+# ---------------------------------------------------------------------------
+
+def test_window_falls_back_then_plane_resumes():
+    g = grid_road_network(9, 9, seed=2)
+    part = bfs_grow_partition(g, 4, seed=3)
+    sys_ = EdgeSystem.deploy(g, part)
+    rng = np.random.default_rng(19)
+    ss, ts = _batch(g, rng, size=256)
+    svc = sys_.service(SCATTER)
+    before = svc.submit(ss, ts).distances.copy()
+    w2 = perturb_weights(g, rng, lo=0.85, hi=1.25)
+    open_rebuild_window(sys_, w2)
+    assert sys_._current_scatter_plane() is None      # mid-window
+    plan = svc.plan(ss, ts)
+    assert isinstance(plan.plane, BucketedPlane)
+    mid = plan.execute().distances
+    close_rebuild_window(sys_)
+    plane = sys_._current_scatter_plane()
+    assert isinstance(plane, ScatterGatherPlane)
+    after = svc.submit(ss, ts)
+    assert isinstance(svc.plan(ss, ts).plane, ScatterGatherPlane)
+    np.testing.assert_array_equal(after.distances, sys_.query_loop(ss, ts))
+    # install_now window answered exactly on the new weights
+    np.testing.assert_array_equal(mid, after.distances)
+    assert not np.array_equal(before, after.distances)
+
+
+def test_traffic_update_swaps_plane_and_keeps_parity():
+    g = grid_road_network(8, 8, seed=4)
+    part = bfs_grow_partition(g, 4, seed=5)
+    sys_ = EdgeSystem.deploy(g, part)
+    rng = np.random.default_rng(23)
+    ss, ts = _batch(g, rng, size=256)
+    p0 = sys_._current_scatter_plane()
+    p0.execute(ss, ts)
+    sys_.apply_traffic_update(perturb_weights(g, rng, lo=0.9, hi=1.2))
+    p1 = sys_._current_scatter_plane()
+    assert p1 is not p0 and p1.version == sys_.center.version > p0.version
+    np.testing.assert_array_equal(p1.execute(ss, ts), sys_.query_loop(ss, ts))
+    # stale border rows from p0's version were dropped by the new push
+    for srv in sys_.servers:
+        assert srv.border_rows_version == sys_.center.version
+
+
+# ---------------------------------------------------------------------------
+# device-count-agnostic mesh case (8 devices in CI)
+# ---------------------------------------------------------------------------
+
+def _mesh_case():
+    """Parity of plane vs loop vs sharded engine on however many devices
+    the backend exposes (tier1-mesh8 forces 8)."""
+    g = grid_road_network(10, 10, seed=6)
+    part = bfs_grow_partition(g, 8, seed=2)
+    sys_ = EdgeSystem.deploy(g, part)
+    rng = np.random.default_rng(29)
+    ss, ts = _batch(g, rng, size=384)
+    loop = sys_.query_loop(ss, ts)
+    plane = sys_._current_scatter_plane()
+    np.testing.assert_array_equal(plane.execute(ss, ts), loop)
+    shd = ShardedBatchedEngine(sys_.center.border_labels.table,
+                               [srv.augmented for srv in sys_.servers],
+                               part.assignment, shard_border=True)
+    np.testing.assert_array_equal(np.asarray(shd.query(ss, ts)), loop)
+    np.testing.assert_array_equal(
+        sys_.service(SCATTER).submit(ss, ts).distances, loop)
+    return True
+
+
+def test_scatter_mesh_case_in_process():
+    assert _mesh_case()
+
+
+@pytest.mark.slow
+def test_scatter_eight_virtual_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import jax; assert len(jax.devices()) == 8;"
+         "import tests.test_scatter_gather as m; assert m._mesh_case();"
+         "print('OK8')"],
+        env=env, capture_output=True, text=True, timeout=500,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK8" in out.stdout

@@ -9,8 +9,8 @@ Pins the api_redesign acceptance criteria:
   certificate fires, and ``stale_ok`` flags its residue non-exact;
 * rule counters live in per-result metadata — batcher padding dummies
   are excluded (the old ``EdgeSystem.stats`` inflation wart);
-* deprecated ``EdgeSystem.query*`` shims warn but keep old signatures
-  and answers;
+* the PR-5 deprecated ``EdgeSystem.query*`` shims are GONE (two PRs of
+  ``-W error::DeprecationWarning`` guard, then removal);
 * ``DistanceBatcher`` accepts any ``QueryPlane`` and rejects
   non-engines with a clear ``TypeError``.
 """
@@ -203,50 +203,18 @@ def test_service_batcher_helper_uses_policy_batch_size(system):
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims
+# deprecated shims: removed after their two-PR deprecation window
 # ---------------------------------------------------------------------------
 
-def test_deprecated_shims_warn_but_keep_old_contract():
-    g = grid_road_network(8, 8, seed=11)
-    part = bfs_grow_partition(g, 4, seed=0)
-    sys_ = EdgeSystem.deploy(g, part)
-    rng = np.random.default_rng(2)
-    ss = rng.integers(0, g.num_vertices, size=128)
-    ts = rng.integers(0, g.num_vertices, size=128)
-    ref = sys_.query_loop(ss, ts)
-    with pytest.deprecated_call(match="EdgeSystem.query_batched"):
-        np.testing.assert_array_equal(sys_.query_batched(ss, ts), ref)
-    with pytest.deprecated_call(match="EdgeSystem.query_many"):
-        np.testing.assert_array_equal(
-            sys_.query_many(ss, ts, use_kernels=False), ref)
-    before = dict(sys_.stats)
-    with pytest.deprecated_call(match="EdgeSystem.query"):
-        d, rule = sys_.query(int(ss[0]), int(ts[0]))
-    assert d == ref[0] and rule in (1, 2, 3)
-    # the legacy mutable stats dict still counts (shim-level back-compat)
-    assert sum(sys_.stats[k] for k in ("rule1", "rule2", "rule3")) \
-        == sum(before[k] for k in ("rule1", "rule2", "rule3")) + 1
-
-
-def test_query_many_forwards_client_districts_and_kernels():
-    """The deprecated query_many shim must keep forwarding
-    client_districts / use_kernels (PR-4 regression, now via service)."""
-    g = grid_road_network(8, 8, seed=11)
-    part = bfs_grow_partition(g, 4, seed=0)
-    sys_ = EdgeSystem.deploy(g, part)
-    ds = part.assignment
-    s = int(np.nonzero(ds == 0)[0][0])
-    t = int(np.nonzero(ds == 0)[0][1])
-    ss = np.array([s]); ts = np.array([t])
-    other = np.array([1], dtype=np.int32)
-    before = dict(sys_.stats)
-    with pytest.deprecated_call():
-        out = sys_.query_many(ss, ts, client_districts=other,
-                              use_kernels=False)
-    assert sys_.stats["rule2"] == before["rule2"] + 1
-    with pytest.deprecated_call():
-        np.testing.assert_allclose(
-            sys_.query_many(ss, ts, client_districts=other), out, rtol=1e-6)
+def test_legacy_shims_removed():
+    """The PR-5 ``EdgeSystem.query/query_batched/query_many`` shims are
+    gone — the service front door is the only query entry point (the
+    scalar reference stays as ``query_loop``)."""
+    for name in ("query", "query_batched", "query_many",
+                 "_query_batched_via_service"):
+        assert not hasattr(EdgeSystem, name), name
+    assert hasattr(EdgeSystem, "query_loop")
+    assert hasattr(EdgeSystem, "service")
 
 
 # ---------------------------------------------------------------------------
@@ -303,7 +271,8 @@ def _mesh8_case():
     ts = rng.integers(0, g.num_vertices, size=384)
     loop = sys_.query_loop(ss, ts)
     for pol in (ServingPolicy(), ServingPolicy(engine="replicated"),
-                ServingPolicy(engine="sharded", shard_border=True)):
+                ServingPolicy(engine="sharded", shard_border=True),
+                ServingPolicy(engine="scatter_gather")):
         np.testing.assert_array_equal(
             sys_.service(pol).submit(ss, ts).distances, loop)
     w2 = perturb_weights(g, np.random.default_rng(5), lo=0.8, hi=1.3)
