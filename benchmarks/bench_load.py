@@ -1,7 +1,7 @@
 """Open-loop load sweep: goodput vs offered load at up to millions of
 simulated clients, through the real ``DistanceService``.
 
-Four sections, all on one deployed 40×40 grid (8 districts):
+Five sections, all on one deployed 40×40 grid (8 districts):
 
 1. **Goodput curve** — offered load swept as multiples of the measured
    single-server capacity (one warm batch dispatch), unbounded queue:
@@ -19,6 +19,10 @@ Four sections, all on one deployed 40×40 grid (8 districts):
    staleness as admission control, ``stale_frac`` > 0, flat tail)
    versus ``certify_or_wait`` where uncertified queries pay the
    measured shortcut-push wait inside the service time.
+5. **Failure row** — a district outage storm with the center down
+   (``repro.edge.faults``): goodput holds while the dark districts'
+   lanes are answered flagged (``degraded_frac`` > 0 asserted) —
+   degrade, never error.
 
 The million-client point (section 1) is the ROADMAP's north-star
 workload: ≥ 10⁶ simulated clients in one run, queue-delay-inclusive
@@ -168,6 +172,28 @@ def run(quick: bool = False) -> None:
         assert wait_rep.stale_frac == 0.0     # waiting never serves stale
     finally:
         close_rebuild_window(system)
+
+    # 5. failure row: district outage storm with the center down — the
+    # load harness keeps answering (goodput holds), the dark districts'
+    # lanes are flagged degraded rather than dropped or wrong
+    from repro.edge import district_outage_storm
+    storm = district_outage_storm(part.num_districts, dark_frac=0.25,
+                                  seed=5, center_down=True)
+    fail_gen = OpenLoopLoadGen(
+        system.service(ServingPolicy(engine="scatter_gather",
+                                     faults=storm)),
+        batch_size=BATCH, window_ms=WINDOW_MS,
+        service_ms_override=(0.2, 0.002), seed=3)
+    fail_gen.warmup()
+    rep = fail_gen.run(_clients_for(0.4 * cap_qps), PER_CLIENT_QPS,
+                       horizon)
+    _report("faulted-storm", rep, extra=f";dark={storm.outage_districts}")
+    emit("load/faulted-storm/degraded-frac", rep.degraded_frac,
+         unit="info",
+         derived=f"center=down;goodput_qps={rep.goodput_qps:,.0f}")
+    assert rep.degraded_frac > 0.0, (
+        "storm with center down degraded nothing — the fault-aware "
+        "network model is not engaging")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Scatter-gather read path: what retiring the center from rule 3 buys.
 
-Four sections on one deployed grid (8 districts):
+Five sections on one deployed grid (8 districts):
 
 1. **Parity gate** — the ``ScatterGatherPlane`` must be bit-for-bit with
    the scalar loop and both device engines on a mixed-rule batch
@@ -20,6 +20,11 @@ Four sections on one deployed grid (8 districts):
    difference is the RTT each cross request is charged
    (``forward_rtt_ms`` = 130 ms vs ``peer_rtt_ms`` = 26 ms), so the
    p99 win is the network win (asserted strict).
+5. **Availability** — the same open-loop point under injected
+   peer-link loss (``link_loss_sweep``): p99 + goodput per loss rate
+   (tail must climb, goodput must hold — degrade-never-error), and a
+   district outage storm with the center down, the one regime where
+   answers are flagged (``degraded_frac`` asserted > 0).
 
 All sections run under ``--quick``; the committed ``BENCH_PR<N>.json``
 baseline records every row.
@@ -148,6 +153,48 @@ def run(quick: bool = False) -> None:
          reps["forwarded"].p99_ms - reps["scatter"].p99_ms, unit="ms",
          derived=f"clients={MEGA_CLIENTS:,}"
                  f";rtt_cross=130->26ms")
+
+    # 5. availability: p99 + goodput vs peer-link loss -----------------------
+    # the faulted network model (repro.edge.faults.loadgen_network_model):
+    # failed exchanges retry then fall back to center forwarding — exact
+    # but two WAN hops — so the tail climbs with the loss rate while
+    # goodput holds (degrade-never-error).  A district storm with the
+    # center down is the only regime that produces flagged answers.
+    from repro.edge import FaultPlan, district_outage_storm, link_loss_sweep
+    n_clients = 100_000 if quick else MEGA_CLIENTS
+    horizon_av = 1_000.0 if quick else horizon_ms
+
+    def _avail(plan):
+        svc = system.service(ServingPolicy(engine="scatter_gather",
+                                           faults=plan))
+        gen = OpenLoopLoadGen(svc, batch_size=BATCH,
+                              service_ms_override=SERVICE_MS_OVERRIDE,
+                              seed=0)
+        gen.warmup()
+        return gen.run(n_clients, per_client, horizon_av,
+                       max_arrivals=4_000_000)
+
+    base = None
+    for plan in link_loss_sweep([0.0, 0.05, 0.2], seed=13):
+        rep = _avail(plan if plan.enabled else None)
+        base = base or rep
+        assert rep.degraded_frac == 0.0, "center up: loss must stay exact"
+        emit(f"scatter/avail-loss{plan.peer_drop_rate:.2f}-p99",
+             rep.p99_ms, unit="ms",
+             derived=f"goodput_qps={rep.goodput_qps:,.0f}"
+                     f";degraded_frac={rep.degraded_frac:.4f}"
+                     f";clients={n_clients:,}")
+    assert rep.p99_ms > base.p99_ms, (
+        f"20% loss p99 {rep.p99_ms:.2f}ms not above clean "
+        f"{base.p99_ms:.2f}ms")
+    storm = district_outage_storm(part.num_districts, dark_frac=0.25,
+                                  seed=13, center_down=True)
+    srep = _avail(storm)
+    assert srep.degraded_frac > 0.0, "dark districts must flag answers"
+    emit("scatter/avail-storm-goodput", srep.goodput_qps, unit="qps",
+         derived=f"p99={srep.p99_ms:.2f}ms"
+                 f";degraded_frac={srep.degraded_frac:.4f}"
+                 f";dark={storm.outage_districts};center=down")
 
 
 if __name__ == "__main__":

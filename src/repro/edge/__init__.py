@@ -7,6 +7,8 @@ from .server import EdgeServer
 from .router import EdgeSystem
 from .engine import BatchedQueryEngine, ShardedBatchedEngine
 from .scatter_gather import ScatterGatherPlane
+from .faults import (NO_FAULTS, FaultInjector, FaultPlan,
+                     district_outage_storm, link_loss_sweep)
 from .simulator import (BatchPolicy, QueryEvent, SimResult, UpdateSchedule,
                         VariableUpdateSchedule, make_trace,
                         run_update_epochs, simulate_centralized,

@@ -218,23 +218,29 @@ class EdgeSystem:
         ``size_bytes()`` footprint."""
         return self._current_engine()
 
-    def _current_scatter_plane(self):
+    def _current_scatter_plane(self, faults=None):
         """Scatter-gather coordinator plane for the current index
         version, or None during a rebuild window (same freshness rule as
         ``_current_engine``).  Building the plane pushes each server its
         own district's B rows; peer exchanges then run lazily per batch
         and persist on the servers across plane rebuilds of the same
-        version."""
+        version.  ``faults`` (an ``edge.faults.FaultPlan``) attaches a
+        deterministic injector; the plan is part of the cache key, so
+        switching plans rebuilds the plane (and its injector epoch)."""
         if any(srv.augmented is None
                or srv.augmented_version != self.center.version
                for srv in self.servers):
             return None
+        if faults is not None and not faults.enabled:
+            faults = None
         key = (self.center.version,
-               tuple(srv.augmented_version for srv in self.servers))
+               tuple(srv.augmented_version for srv in self.servers),
+               faults)
         if self._scatter is None or self._scatter_key != key:
             from .scatter_gather import ScatterGatherPlane
             self._scatter = None
-            self._scatter = ScatterGatherPlane.from_system(self)
+            self._scatter = ScatterGatherPlane.from_system(self,
+                                                           faults=faults)
             self._scatter_key = key
         return self._scatter
 

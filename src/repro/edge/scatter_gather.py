@@ -35,6 +35,18 @@ The plane implements the ``QueryPlane`` protocol; select it with
 modeled in ``edge/simulator.py`` and ``serve/loadgen.py`` (cross-district
 requests pay ``Topology.peer_rtt_ms()`` instead of ``forward_rtt_ms()``)
 and measured in ``benchmarks/bench_scatter.py``.
+
+**Faults** (``edge/faults.py``): with ``ServingPolicy(faults=...)`` the
+plane runs every peer exchange through a deterministic ``FaultInjector``
+and degrades instead of erroring — bounded retry + backoff on the link,
+(s, t)-swap reroute to the surviving district's server when the owner is
+dark (bit-identical by min symmetry), forwarded-path fallback through
+the center (exact for rule-3 lanes), previous-generation border rows
+(flagged ``stale``), and finally a flagged +inf.  After a faulted batch
+the plane's ``exactness_codes`` / ``degraded`` arrays carry the
+per-lane verdict into ``ResultBatch`` — no silent wrong answers.  With
+the plan disabled the fault path is never entered and the plane stays
+bit-for-bit with the engines.
 """
 from __future__ import annotations
 
@@ -71,11 +83,29 @@ class ScatterGatherPlane:
     _bviews: list[np.ndarray | None] = field(repr=False)
     _held: list[set] = field(repr=False)
     exchange_stats: dict = field(default_factory=lambda: {
-        "exchanges": 0, "rows_exchanged": 0})
+        "exchanges": 0, "rows_exchanged": 0, "retries": 0,
+        "failed_exchanges": 0, "charged_ms": 0.0})
+    # fault-injection runtime (edge/faults.FaultInjector) — None on the
+    # clean fast path, which then stays bit-for-bit with the engines
+    faults: object | None = field(default=None, repr=False)
+    # forwarded-path fallback target (ComputingCenter); only read when
+    # degrading — the clean read path never touches it
+    center: object | None = field(default=None, repr=False)
+    # districts whose rows in a server's view are previous-generation
+    _stale_held: list[set] = field(default_factory=list, repr=False)
+    # per-batch degradation metadata (None after a clean batch); the
+    # request plane lifts these into ResultBatch via getattr
+    exactness_codes: np.ndarray | None = field(default=None, repr=False)
+    degraded: np.ndarray | None = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if not self._stale_held:
+            self._stale_held = [set() for _ in self.servers]
 
     @classmethod
     def from_system(cls, system: "EdgeSystem",
-                    use_pallas: bool | None = None) -> "ScatterGatherPlane":
+                    use_pallas: bool | None = None,
+                    faults=None) -> "ScatterGatherPlane":
         """Build from a deployed system: the center pushes each server
         its own district's B rows (the build-path role it keeps), then
         the coordinator packs the same blocked layout the sharded engine
@@ -87,10 +117,15 @@ class ScatterGatherPlane:
             if not srv.has_border_rows(srv.district_id, version):
                 verts, rows = center.border_rows_for(srv.district_id)
                 srv.install_border_rows(verts, rows, version)
-        return cls.build(center.border_labels.table,
-                         [srv.augmented for srv in system.servers],
-                         system.partition.assignment, system.servers,
-                         version, use_pallas=use_pallas)
+        plane = cls.build(center.border_labels.table,
+                          [srv.augmented for srv in system.servers],
+                          system.partition.assignment, system.servers,
+                          version, use_pallas=use_pallas)
+        plane.center = center
+        if faults is not None and getattr(faults, "enabled", False):
+            from .faults import FaultInjector
+            plane.faults = FaultInjector(faults)
+        return plane
 
     @classmethod
     def build(cls, btable: np.ndarray, locals_: list[LocalIndex],
@@ -159,12 +194,18 @@ class ScatterGatherPlane:
 
     def execute(self, ss: np.ndarray, ts: np.ndarray) -> np.ndarray:
         """Scatter the batch into per-district partials, consolidate
-        with one MIN-of-MINs."""
+        with one MIN-of-MINs.  With a fault injector attached the batch
+        runs through the degradation ladder instead (``_execute_faulted``
+        — same answers wherever nothing actually fails)."""
         ss = np.asarray(ss, dtype=np.int64)
         ts = np.asarray(ts, dtype=np.int64)
+        self.exactness_codes = None     # per-batch metadata: reset so a
+        self.degraded = None            # clean batch never leaks flags
         qn = len(ss)
         if qn == 0:
             return np.zeros(0, dtype=np.float32)
+        if self.faults is not None:
+            return self._execute_faulted(ss, ts)
         coords = prepare_queries(self.data, ss, ts)
         owner, rs, rt = coords["owner"], coords["rs"], coords["rt"]
         kmax = self.data.kmax
@@ -189,6 +230,187 @@ class ScatterGatherPlane:
 
     query = execute
     __call__ = execute
+
+    # -- graceful degradation under injected faults --------------------------
+
+    def _ensure_rows_faulted(self, d: int, j: int) -> str:
+        """Fault-aware counterpart of ``_ensure_rows`` for ONE peer
+        district: make server ``d``'s view hold district ``j``'s B rows
+        if any rung of the ladder can supply them.  Returns ``"ok"``
+        (current rows present), ``"stale"`` (previous generation
+        installed), or the blocking fault (``"drop" | "timeout" |
+        "outage"``)."""
+        srv = self.servers[d]
+        held = self._held[d]
+        stale_held = self._stale_held[d]
+        if j in held and j not in stale_held:
+            return "ok"
+        if j == d or srv.has_border_rows(j, srv.border_rows_version):
+            # own slice, or already cached server-side: no network hop,
+            # so no fault can apply (also how a stale view heals)
+            verts, rows = srv.border_rows_of(j)
+            self._bview(d)[verts] = rows
+            held.add(j)
+            stale_held.discard(j)
+            return "ok"
+        inj = self.faults
+        if inj.server_down(j):
+            fault = "outage"
+        else:
+            outc = inj.exchange(srv, self.servers[j])
+            st = self.exchange_stats
+            st["charged_ms"] += outc.charged_ms
+            if outc.ok:
+                if outc.moved:
+                    st["exchanges"] += 1
+                    st["rows_exchanged"] += outc.moved
+                verts, rows = srv.border_rows_of(j)
+                self._bview(d)[verts] = rows
+                held.add(j)
+                stale_held.discard(j)
+                return "ok"
+            st["failed_exchanges"] += 1
+            st["retries"] = inj.stats["retries"]
+            fault = outc.fault
+        if j not in held:
+            stale = srv.stale_border_rows_of(j)
+            if stale is not None and \
+                    stale[1].shape[1] == self.border_width:
+                verts, rows = stale
+                self._bview(d)[verts] = rows
+                held.add(j)
+                stale_held.add(j)
+        return "stale" if j in held else fault
+
+    def _execute_faulted(self, ss: np.ndarray, ts: np.ndarray
+                         ) -> np.ndarray:
+        """The degradation ladder (module docstring of ``edge.faults``):
+        reroute dark owners to the surviving min, retry peer links with
+        backoff, forward failures through the center, serve stale rows,
+        and flag whatever is left — every non-exact answer carries
+        ``exactness_codes == 2`` and a ``degraded`` reason string."""
+        inj = self.faults
+        inj.tick()
+        qn = len(ss)
+        kmax = self.data.kmax
+        assignment = self.data.assignment
+        out = np.full(qn, INF, dtype=np.float32)
+        codes = np.zeros(qn, dtype=np.uint8)
+        reasons = np.full(qn, None, dtype=object)
+        live = np.ones(qn, dtype=bool)
+        coords = prepare_queries(self.data, ss, ts)
+        owner = coords["owner"].copy()
+        rs, rt = coords["rs"].copy(), coords["rt"].copy()
+        center_up = self.center is not None and not inj.center_down()
+
+        def via_center(idx: np.ndarray, fault: str) -> None:
+            # forwarded-path fallback: the center's B join is the §4.2
+            # rule-3 identity, so cross lanes stay EXACT (the reason
+            # records the reroute; exactness does not change)
+            out[idx] = np.asarray(
+                self.center.answer_cross_many(ss[idx], ts[idx]),
+                dtype=np.float32)
+            reasons[idx] = f"{fault}:forwarded_via_center"
+            live[idx] = False
+
+        def via_bound(idx: np.ndarray, fault: str) -> None:
+            # same-district lanes on a dark server: min_b B[s,b]+B[t,b]
+            # is a certified UPPER bound (triangle inequality over real
+            # border paths) — served, but flagged stale
+            out[idx] = np.asarray(
+                self.center.answer_cross_many(ss[idx], ts[idx]),
+                dtype=np.float32)
+            codes[idx] = np.uint8(2)
+            reasons[idx] = f"{fault}:border_upper_bound"
+            live[idx] = False
+
+        def unavailable(idx: np.ndarray, fault: str) -> None:
+            codes[idx] = np.uint8(2)            # +inf, flagged — never
+            reasons[idx] = f"{fault}:unavailable"   # a silent answer
+            live[idx] = False
+
+        # 1. dark owners: reroute cross lanes to the surviving min ----------
+        orig_owner = coords["owner"]
+        for d in np.unique(orig_owner):
+            d = int(d)
+            if not inj.server_down(d):
+                continue
+            idx = np.nonzero(orig_owner == d)[0]
+            cross_l = rt[idx] >= kmax
+            same_idx = idx[~cross_l]
+            if len(same_idx):
+                (via_bound if center_up else unavailable)(
+                    same_idx, "server_outage")
+            cidx = idx[cross_l]
+            if len(cidx):
+                # rule 3 from the surviving min: swap (s, t) so the
+                # TARGET district's server owns the lane — identical
+                # answer by symmetry of min_b B[s,b] + B[t,b]
+                sw = prepare_queries(self.data, ts[cidx], ss[cidx])
+                surv_dark = np.fromiter(
+                    (inj.server_down(int(j)) for j in sw["owner"]),
+                    dtype=bool, count=len(cidx))
+                ok = cidx[~surv_dark]
+                if len(ok):
+                    owner[ok] = sw["owner"][~surv_dark]
+                    rs[ok] = sw["rs"][~surv_dark]
+                    rt[ok] = sw["rt"][~surv_dark]
+                    reasons[ok] = "server_outage:rerouted_to_survivor"
+                bad = cidx[surv_dark]
+                if len(bad):
+                    (via_center if center_up else unavailable)(
+                        bad, "server_outage")
+
+        # 2. surviving districts join their partials ------------------------
+        for d in np.unique(owner[live]):
+            d = int(d)
+            sel = np.nonzero(live & (owner == d))[0]
+            rs_d, rt_d = rs[sel], rt[sel]
+            fault_of: dict[int, str] = {}
+            stale_of: set[int] = set()
+            if (rt_d >= kmax).any() or (rs_d >= kmax).any():
+                # districts whose B rows this partial reads (a rerouted
+                # lane's rs-side is the ORIGINAL source's district)
+                need = np.concatenate([rs_d[rs_d >= kmax],
+                                       rt_d[rt_d >= kmax]]) - kmax
+                for j in np.unique(np.append(assignment[need], d)):
+                    status = self._ensure_rows_faulted(d, int(j))
+                    if status == "stale":
+                        stale_of.add(int(j))
+                    elif status != "ok":
+                        fault_of[int(j)] = status
+            # per-lane districts (d itself for local row ids)
+            src_dist = np.where(
+                rs_d >= kmax, assignment[np.maximum(rs_d - kmax, 0)], d)
+            tgt_dist = np.where(
+                rt_d >= kmax, assignment[np.maximum(rt_d - kmax, 0)], d)
+            if fault_of:
+                failing = np.array(sorted(fault_of), dtype=np.int64)
+                bad = np.isin(src_dist, failing) | np.isin(tgt_dist,
+                                                           failing)
+                for lane, sd_, td_ in zip(sel[bad], src_dist[bad],
+                                          tgt_dist[bad]):
+                    f = fault_of.get(int(td_), fault_of.get(int(sd_)))
+                    (via_center if center_up else unavailable)(
+                        np.array([lane]), f"peer_{f}")
+                keep = ~bad
+                sel, rs_d, rt_d = sel[keep], rs_d[keep], rt_d[keep]
+                src_dist, tgt_dist = src_dist[keep], tgt_dist[keep]
+            if stale_of:
+                staling = np.array(sorted(stale_of), dtype=np.int64)
+                st = np.isin(src_dist, staling) | np.isin(tgt_dist,
+                                                          staling)
+                codes[sel[st]] = np.uint8(2)
+                reasons[sel[st]] = "peer_link_down:stale_border_rows"
+            if len(sel):
+                vals = lj.join_partial_gathered(
+                    self._gather(d, rs_d), self._gather(d, rt_d),
+                    use_pallas=self.use_pallas)
+                out[sel] = vals
+                live[sel] = False
+        self.exactness_codes = codes
+        self.degraded = reasons
+        return out
 
     # -- accounting ----------------------------------------------------------
 

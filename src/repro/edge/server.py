@@ -39,6 +39,12 @@ class EdgeServer:
     border_rows_version: int = -1
     _border_rows: dict[int, tuple[np.ndarray, np.ndarray]] = \
         field(default_factory=dict, repr=False)
+    # one previous generation of border rows, kept for graceful
+    # degradation: when a peer exchange fails AND the center is
+    # unreachable, the scatter plane serves these flagged "stale"
+    _stale_rows: dict[int, tuple[np.ndarray, np.ndarray]] | None = \
+        field(default=None, repr=False)
+    _stale_rows_version: int = -2
 
     @classmethod
     def bootstrap(cls, g: Graph, part: Partition,
@@ -102,8 +108,13 @@ class EdgeServer:
     def install_border_rows(self, vertices: np.ndarray, rows: np.ndarray,
                             version: int) -> None:
         """Center push of this district's own B rows for ``version``;
-        drops every stale slice (own and peer) from older versions."""
+        drops every stale slice (own and peer) from older versions from
+        the ACTIVE store, retaining exactly one previous generation for
+        the fault-degradation ladder (``stale_border_rows_of``)."""
         if version != self.border_rows_version:
+            if self._border_rows:
+                self._stale_rows = self._border_rows
+                self._stale_rows_version = self.border_rows_version
             self._border_rows = {}
             self.border_rows_version = version
         self._border_rows[self.district_id] = (vertices, rows)
@@ -117,6 +128,15 @@ class EdgeServer:
         """``(vertices, rows)`` held for ``district_id`` (own or
         previously exchanged)."""
         return self._border_rows[district_id]
+
+    def stale_border_rows_of(self, district_id: int
+                             ) -> tuple[np.ndarray, np.ndarray] | None:
+        """The previous-generation B rows held for ``district_id``, or
+        None.  The last rung before "unavailable" in the degradation
+        ladder: answers joined from these are flagged ``stale``."""
+        if self._stale_rows is None:
+            return None
+        return self._stale_rows.get(int(district_id))
 
     def exchange_border_rows(self, peer: "EdgeServer") -> int:
         """Peer-to-peer pull of ``peer``'s own B rows — the §4.2 rule-3

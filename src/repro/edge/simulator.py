@@ -51,16 +51,18 @@ class SimResult:
     lb_certified_frac: float = 0.0
     waited_frac: float = 0.0
     stale_frac: float = 0.0     # served stale under the stale_ok policy
+    degraded_frac: float = 0.0  # flagged non-exact under injected faults
 
     @classmethod
     def from_latencies(cls, lat: np.ndarray, lb_frac=0.0, waited=0.0,
-                       stale=0.0):
+                       stale=0.0, degraded=0.0):
         if len(lat) == 0:       # empty trace: zeros, not NaN + warnings
             return cls(np.asarray(lat, dtype=np.float64), 0.0, 0.0, 0.0,
-                       0.0, lb_frac, waited, stale)
+                       0.0, lb_frac, waited, stale, degraded)
         return cls(lat, float(lat.mean()), float(np.percentile(lat, 50)),
                    float(np.percentile(lat, 95)),
-                   float(np.percentile(lat, 99)), lb_frac, waited, stale)
+                   float(np.percentile(lat, 99)), lb_frac, waited, stale,
+                   degraded)
 
     def row(self, name: str) -> dict:
         return {"system": name, "mean_ms": round(self.mean_ms, 3),
@@ -69,7 +71,8 @@ class SimResult:
                 "p99_ms": round(self.p99_ms, 3),
                 "lb_certified": round(self.lb_certified_frac, 3),
                 "waited": round(self.waited_frac, 3),
-                "stale": round(self.stale_frac, 3)}
+                "stale": round(self.stale_frac, 3),
+                "degraded": round(self.degraded_frac, 3)}
 
 
 def make_trace(g: Graph, num_queries: int, horizon_ms: float,
@@ -314,12 +317,23 @@ def simulate_centralized(trace: list[QueryEvent], topo: Topology,
     return SimResult.from_latencies(lat, waited=waited / max(1, len(trace)))
 
 
+def _resolve_injector(faults, policy):
+    """FaultInjector from an explicit plan or ``policy.faults`` (None
+    when nothing is enabled — the clean path stays untouched)."""
+    plan = faults if faults is not None else getattr(policy, "faults", None)
+    if plan is None or not getattr(plan, "enabled", False):
+        return None
+    from .faults import FaultInjector
+    return FaultInjector(plan)
+
+
 def simulate_edge(trace: list[QueryEvent], topo: Topology,
                   schedule: "UpdateSchedule | VariableUpdateSchedule",
                   assignment: np.ndarray,
                   certified_fn, num_districts: int,
                   batch: BatchPolicy | None = None,
-                  policy: "ServingPolicy | None" = None) -> SimResult:
+                  policy: "ServingPolicy | None" = None,
+                  faults=None) -> SimResult:
     """``certified_fn(s, t) -> bool`` — whether Theorem 3 certifies the
     local answer for a same-district pair (precomputed by the caller from
     the actual indexes, so the simulation uses real certification rates;
@@ -343,15 +357,23 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
     exchange) instead of forwarding through the center's WAN hops —
     the center leaves the read path, so cross-district load also stops
     queueing at one shared server.
+
+    ``faults`` (or ``policy.faults``) attaches a deterministic
+    ``edge.faults.FaultPlan``: dark servers reroute cross lanes to the
+    survivor, dead peer links are charged the retry/backoff budget then
+    forwarded through the center, and lanes that can only be served
+    stale/unavailable are counted in ``SimResult.degraded_frac``.
     """
     stale_ok = policy is not None and policy.rebuild == "stale_ok"
     scatter = policy is not None and policy.engine == "scatter_gather"
+    inj = _resolve_injector(faults, policy)
     if batch is None and policy is not None:
         batch = policy.batch
     if batch is not None:
         return _simulate_edge_batched(trace, topo, schedule, assignment,
                                       certified_fn, num_districts, batch,
-                                      stale_ok=stale_ok, scatter=scatter)
+                                      stale_ok=stale_ok, scatter=scatter,
+                                      inj=inj)
     edge_servers = [_Server(topo.latency.edge_service_ms)
                     for _ in range(num_districts)]
     center = _Server(topo.latency.center_service_ms)
@@ -359,12 +381,28 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
     certified_n = 0
     waited = 0
     stale_n = 0
+    degraded_n = 0
     lm = topo.latency
     for i, ev in enumerate(trace):
+        if inj is not None:
+            inj.tick()
         ds, dt = int(assignment[ev.s]), int(assignment[ev.t])
         local_ready, global_ready = schedule.edge_windows(ev.t_ms)
         if ds == dt:
             arrive = ev.t_ms + lm.client_edge_ms
+            if inj is not None and inj.server_down(ds):
+                # dark district: the center's B join is a certified
+                # upper bound — served over the WAN, flagged degraded;
+                # with the center dark too, a flat flagged failure
+                degraded_n += 1
+                if not inj.center_down():
+                    a = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
+                    done = center.serve(a)
+                    lat[i] = done + lm.edge_center_ms + lm.client_edge_ms \
+                        - ev.t_ms
+                else:
+                    lat[i] = 2 * lm.client_edge_ms
+                continue
             if arrive >= global_ready:          # L_i⁺ fresh: exact at edge
                 done = edge_servers[ds].serve(arrive)
                 lat[i] = done + lm.client_edge_ms - ev.t_ms
@@ -396,8 +434,49 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                 else:
                     waited += 1
                     arrive = global_ready
-            done = edge_servers[ds].serve(arrive)
-            lat[i] = done + lm.peer_edge_ms + lm.client_edge_ms - ev.t_ms
+            if inj is None:
+                done = edge_servers[ds].serve(arrive)
+                lat[i] = done + lm.peer_edge_ms + lm.client_edge_ms \
+                    - ev.t_ms
+                continue
+            src_dark = inj.server_down(ds)
+            if src_dark and not inj.server_down(dt):
+                # rule 3 from the surviving min: the target district's
+                # server owns the lane — exact, same peer math
+                done = edge_servers[dt].serve(arrive)
+                lat[i] = done + lm.peer_edge_ms + lm.client_edge_ms \
+                    - ev.t_ms
+                continue
+            if src_dark:                        # both districts dark
+                if not inj.center_down():       # forwarded: still exact
+                    a = arrive - lm.peer_edge_ms + lm.edge_center_ms
+                    done = center.serve(a)
+                    lat[i] = done + lm.edge_center_ms + lm.client_edge_ms \
+                        - ev.t_ms
+                else:                           # flagged unavailable
+                    degraded_n += 1
+                    lat[i] = 2 * lm.client_edge_ms
+                continue
+            ok, fault, charged, slow = inj.link_trial(ds, dt)
+            if ok:
+                if slow:                        # degraded (slow) link
+                    charged += (inj.plan.slow_factor - 1) * lm.peer_edge_ms
+                done = edge_servers[ds].serve(arrive + charged)
+                lat[i] = done + lm.peer_edge_ms + lm.client_edge_ms \
+                    - ev.t_ms
+            elif not inj.center_down():
+                # peer link dead: forwarded-path fallback, still exact
+                a = arrive - lm.peer_edge_ms + charged + lm.edge_center_ms
+                done = center.serve(a)
+                lat[i] = done + lm.edge_center_ms + lm.client_edge_ms \
+                    - ev.t_ms
+            else:
+                # stale previous-generation rows (or flagged +inf),
+                # served locally after the failed retries
+                degraded_n += 1
+                done = edge_servers[ds].serve(
+                    arrive - lm.peer_edge_ms + charged)
+                lat[i] = done + lm.client_edge_ms - ev.t_ms
         else:
             arrive = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
             if arrive < global_ready:
@@ -406,12 +485,21 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                 else:
                     waited += 1
                     arrive = global_ready
+            if inj is not None and inj.center_down():
+                # forwarded path with the center dark: flagged local
+                # stale serve instead of an error
+                degraded_n += 1
+                a = ev.t_ms + lm.client_edge_ms
+                done = edge_servers[ds].serve(a)
+                lat[i] = done + lm.client_edge_ms - ev.t_ms
+                continue
             done = center.serve(arrive)
             lat[i] = done + lm.edge_center_ms + lm.client_edge_ms - ev.t_ms
     return SimResult.from_latencies(
         lat, lb_frac=certified_n / max(1, len(trace)),
         waited=waited / max(1, len(trace)),
-        stale=stale_n / max(1, len(trace)))
+        stale=stale_n / max(1, len(trace)),
+        degraded=degraded_n / max(1, len(trace)))
 
 
 def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
@@ -419,12 +507,14 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                            certified_fn, num_districts: int,
                            batch: BatchPolicy,
                            stale_ok: bool = False,
-                           scatter: bool = False) -> SimResult:
+                           scatter: bool = False,
+                           inj=None) -> SimResult:
     """§4.2 routing with micro-batched service at every server: same
     freshness rules as the per-query path, but departures are assigned at
     batch flush time (see _BatchedServer).  ``scatter`` routes rule-3
-    lanes to the source district's server over the peer link (see
-    simulate_edge)."""
+    lanes to the source district's server over the peer link; ``inj``
+    (a ``FaultInjector``) applies the same degradation ladder as the
+    per-query path (see simulate_edge)."""
     edge_servers = [_BatchedServer(batch) for _ in range(num_districts)]
     center = _BatchedServer(batch)
     departures = np.empty(len(trace), dtype=np.float64)
@@ -432,13 +522,25 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
     certified_n = 0
     waited = 0
     stale_n = 0
+    degraded_n = 0
     lm = topo.latency
     for i, ev in enumerate(trace):
+        if inj is not None:
+            inj.tick()
         ds, dt = int(assignment[ev.s]), int(assignment[ev.t])
         local_ready, global_ready = schedule.edge_windows(ev.t_ms)
         if ds == dt:
             arrive = ev.t_ms + lm.client_edge_ms
             back_ms[i] = lm.client_edge_ms
+            if inj is not None and inj.server_down(ds):
+                degraded_n += 1     # dark district: center upper bound
+                if not inj.center_down():
+                    back_ms[i] = lm.edge_center_ms + lm.client_edge_ms
+                    center.submit(i, arrive + lm.edge_center_ms,
+                                  departures)
+                else:               # flat flagged failure, no service
+                    departures[i] = arrive
+                continue
             if arrive >= global_ready:          # L_i⁺ fresh: exact at edge
                 edge_servers[ds].submit(i, arrive, departures)
                 continue
@@ -463,7 +565,38 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                 else:
                     waited += 1
                     arrive = global_ready
-            edge_servers[ds].submit(i, arrive, departures)
+            if inj is None:
+                edge_servers[ds].submit(i, arrive, departures)
+                continue
+            src_dark = inj.server_down(ds)
+            if src_dark and not inj.server_down(dt):
+                # surviving-min reroute: target server, same peer math
+                edge_servers[dt].submit(i, arrive, departures)
+                continue
+            if src_dark:                        # both districts dark
+                if not inj.center_down():
+                    back_ms[i] = lm.edge_center_ms + lm.client_edge_ms
+                    center.submit(i, arrive - lm.peer_edge_ms
+                                  + lm.edge_center_ms, departures)
+                else:
+                    degraded_n += 1
+                    back_ms[i] = lm.client_edge_ms
+                    departures[i] = ev.t_ms + lm.client_edge_ms
+                continue
+            ok, fault, charged, slow = inj.link_trial(ds, dt)
+            if ok:
+                if slow:
+                    charged += (inj.plan.slow_factor - 1) * lm.peer_edge_ms
+                edge_servers[ds].submit(i, arrive + charged, departures)
+            elif not inj.center_down():         # forwarded: still exact
+                back_ms[i] = lm.edge_center_ms + lm.client_edge_ms
+                center.submit(i, arrive - lm.peer_edge_ms + charged
+                              + lm.edge_center_ms, departures)
+            else:                               # local stale, flagged
+                degraded_n += 1
+                back_ms[i] = lm.client_edge_ms
+                edge_servers[ds].submit(i, arrive - lm.peer_edge_ms
+                                        + charged, departures)
         else:
             arrive = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
             back_ms[i] = lm.edge_center_ms + lm.client_edge_ms
@@ -473,6 +606,12 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                 else:
                     waited += 1
                     arrive = global_ready
+            if inj is not None and inj.center_down():
+                degraded_n += 1     # center dark: flagged local serve
+                back_ms[i] = lm.client_edge_ms
+                edge_servers[ds].submit(i, ev.t_ms + lm.client_edge_ms,
+                                        departures)
+                continue
             center.submit(i, arrive, departures)
     for srv in edge_servers:
         srv.finish(departures)
@@ -481,4 +620,5 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
     return SimResult.from_latencies(
         lat, lb_frac=certified_n / max(1, len(trace)),
         waited=waited / max(1, len(trace)),
-        stale=stale_n / max(1, len(trace)))
+        stale=stale_n / max(1, len(trace)),
+        degraded=degraded_n / max(1, len(trace)))

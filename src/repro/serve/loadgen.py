@@ -117,6 +117,7 @@ class LoadReport:
     queue_peak: int
     engine_calls: int
     mean_batch_service_ms: float
+    degraded_frac: float = 0.0      # of admitted (fault-flagged answers)
     latencies_ms: np.ndarray = field(default=None, repr=False)
 
     def row(self) -> dict:
@@ -184,9 +185,17 @@ class OpenLoopLoadGen:
         assignment = system.partition.assignment
         cross = assignment[ss] != assignment[ts]
         topo = Topology(system.partition.num_districts, self.latency)
-        rtt = request_rtt_ms(
-            topo, cross,
-            scatter=self.service.policy.engine == "scatter_gather")
+        scatter = self.service.policy.engine == "scatter_gather"
+        fault_plan = getattr(self.service.policy, "faults", None)
+        degraded = np.zeros(offered, dtype=bool)
+        if scatter and fault_plan is not None:
+            # fault-aware network view: failed/slow links, reroutes, and
+            # the lanes that can only be answered degraded (flagged)
+            from ..edge.faults import loadgen_network_model
+            rtt, degraded, _fault_info = loadgen_network_model(
+                fault_plan, topo, assignment[ss], assignment[ts], cross)
+        else:
+            rtt = request_rtt_ms(topo, cross, scatter=scatter)
 
         update_at_ms = (None if update_at_frac is None
                         else float(update_at_frac) * horizon_ms)
@@ -294,4 +303,5 @@ class OpenLoopLoadGen:
             p999_ms=float(p999), max_ms=mx, queue_peak=queue_peak,
             engine_calls=engine_calls,
             mean_batch_service_ms=service_ms_total / max(1, engine_calls),
+            degraded_frac=int(degraded[~shed].sum()) / max(1, admitted),
             latencies_ms=lat)

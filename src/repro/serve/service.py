@@ -58,6 +58,7 @@ import numpy as np
 from ..core.query import Rule, bucket_by_rule, route
 
 if TYPE_CHECKING:                                   # pragma: no cover
+    from ..edge.faults import FaultPlan
     from ..edge.router import EdgeSystem
     from ..edge.simulator import BatchPolicy
     from .distance_batcher import DistanceBatcher
@@ -101,12 +102,16 @@ class ServingPolicy:
     carries the micro-batching discipline (a simulator ``BatchPolicy``)
     for ``DistanceService.batcher`` and ``simulate_edge(policy=...)``.
     ``rebuild`` is the rebuild-window mode (see module docstring).
+    ``faults`` attaches a deterministic ``edge.faults.FaultPlan`` to the
+    scatter-gather plane (degrade-never-error discipline; a disabled
+    plan is normalized to None so it cannot perturb the clean path).
     """
     engine: str = "auto"
     shard_border: bool | None = None
     use_kernels: bool = True
     rebuild: str = INSTALL_NOW
     batch: "BatchPolicy | None" = None
+    faults: "FaultPlan | None" = None
 
     def __post_init__(self):
         if self.engine not in ENGINE_PLACEMENTS:
@@ -115,6 +120,8 @@ class ServingPolicy:
         if self.rebuild not in REBUILD_MODES:
             raise ValueError(f"rebuild must be one of {REBUILD_MODES}, "
                              f"got {self.rebuild!r}")
+        if self.faults is not None and not self.faults.enabled:
+            object.__setattr__(self, "faults", None)
 
 
 @dataclass(frozen=True)
@@ -136,6 +143,11 @@ class QueryResult:
     index_version: int
     latency_s: float
     waited: bool = False    # deferred to the shortcut push mid-window
+    # why (and how) the answer degraded under injected faults, e.g.
+    # "peer_drop:forwarded_via_center"; None on the clean path.  A set
+    # reason with exactness == "exact" means the fallback route itself
+    # is exact (center forwarding, surviving-min reroute).
+    degraded_reason: str | None = None
 
     @property
     def exact(self) -> bool:
@@ -170,6 +182,7 @@ class ResultBatch:
     _fallback: np.ndarray | None = None  # (B,) bool — plain-L_i Thm-3 path
     _waited: np.ndarray | None = None   # (B,) bool — deferred to the push
     real: np.ndarray | None = None      # (B,) bool — False for padding
+    _degraded: np.ndarray | None = None  # (B,) object — fault reasons
 
     def __len__(self) -> int:
         return len(self.distances)
@@ -200,11 +213,19 @@ class ResultBatch:
             self._waited = np.zeros(len(self.distances), dtype=bool)
         return self._waited
 
+    @property
+    def degraded_reason(self) -> np.ndarray:
+        if self._degraded is None:
+            self._degraded = np.full(len(self.distances), None,
+                                     dtype=object)
+        return self._degraded
+
     def __getitem__(self, i: int) -> QueryResult:
         return QueryResult(float(self.distances[i]), Rule(int(self.rules[i])),
                            _EXACTNESS[int(self.exactness_codes[i])],
                            self.index_version, self.latency_s,
-                           bool(self.waited[i]))
+                           bool(self.waited[i]),
+                           self.degraded_reason[i])
 
     def to_list(self) -> list[QueryResult]:
         return [self[i] for i in range(len(self))]
@@ -353,19 +374,21 @@ class QueryPlan:
         dist = np.asarray(self.plane.execute(self.ss, self.ts),
                           dtype=np.float32)
         latency = time.perf_counter() - t0
-        if self.window or isinstance(self.plane, BucketedPlane):
-            codes = self.plane.exactness_codes
-            fallback = self.plane.fallback
-            waited = self.plane.waited
-        else:               # steady-state engine snapshot: all exact
-            codes = fallback = waited = None
+        # per-batch metadata is plane-published: the BucketedPlane sets
+        # all three window arrays, the scatter plane sets exactness +
+        # degraded reasons after a faulted batch, and the steady-state
+        # engines have none of the attributes (None ⇒ lazily all-exact)
+        codes = getattr(self.plane, "exactness_codes", None)
+        fallback = getattr(self.plane, "fallback", None)
+        waited = getattr(self.plane, "waited", None)
+        degraded = getattr(self.plane, "degraded", None)
         if real is not None:
             real = np.asarray(real, dtype=bool)
         batch = ResultBatch(
             dist, self.service.index_version, latency,
             (self.service.system.partition.assignment, self.ss, self.ts,
              self.client_districts),
-            None, codes, fallback, waited, real)
+            None, codes, fallback, waited, real, degraded)
         self.service._enqueue(batch)
         return batch
 
@@ -436,11 +459,12 @@ class DistanceService:
         if not p.use_kernels:
             return None
         key = (self.system.center.version, p.engine, p.shard_border,
-               self.system.prefer_sharded, self.system.shard_border)
+               self.system.prefer_sharded, self.system.shard_border,
+               p.faults)
         if self._plane_cache is not None and self._plane_cache[0] == key:
             return self._plane_cache[1]
         if p.engine == "scatter_gather":
-            engine = self.system._current_scatter_plane()
+            engine = self.system._current_scatter_plane(faults=p.faults)
         else:
             prefer = {"auto": self.system.prefer_sharded,
                       "replicated": False, "sharded": True}[p.engine]

@@ -11,7 +11,9 @@ from repro.core import (bfs_grow_partition, border_mask, borders_of,
                         build_all_local_indexes,
                         build_border_labels_hierarchical,
                         build_border_labels_reference, certified_local_query,
-                        dijkstra, from_edges, is_connected, pll)
+                        dijkstra, from_edges, is_connected, perturb_weights,
+                        pll)
+from repro.edge import EdgeSystem
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -129,6 +131,55 @@ def _check_label_query_symmetry(g, seed):
         assert labels.query(s, t) == labels.query(t, s)
 
 
+def _check_triangle_inequality(g, seed):
+    """Metric axiom on the 2-hop labels: d(s,t) <= d(s,u) + d(u,t) for
+    every detour vertex u (label mins can only over-count a detour)."""
+    labels = pll(g)
+    rng = np.random.default_rng(seed + 5)
+    n = g.num_vertices
+    for _ in range(12):
+        s, t, u = (int(rng.integers(n)) for _ in range(3))
+        assert labels.query(s, t) <= \
+            labels.query(s, u) + labels.query(u, t) + 1e-3, (s, t, u)
+
+
+def _check_path_consistency(g, seed):
+    """Bellman condition: for s != t, d(s,t) is attained through some
+    neighbor of s — min_u (w(s,u) + d(u,t)) == d(s,t)."""
+    labels = pll(g)
+    rng = np.random.default_rng(seed + 6)
+    n = g.num_vertices
+    for _ in range(8):
+        s, t = int(rng.integers(n)), int(rng.integers(n))
+        if s == t:
+            continue
+        nbrs, ws = g.neighbors(s)
+        best = min(float(w) + labels.query(int(u), t)
+                   for u, w in zip(nbrs, ws))
+        assert abs(best - labels.query(s, t)) <= 1e-3, (s, t)
+
+
+def _check_consistency_under_deltas(g, seed, m):
+    """Random traffic deltas: after re-weighting + rebuild the deployed
+    system stays symmetric bit-for-bit and agrees with Dijkstra on the
+    NEW weights (no stale state survives the update path)."""
+    part = bfs_grow_partition(g, m, seed=seed % 977)
+    sys_ = EdgeSystem.deploy(g, part)
+    rng = np.random.default_rng(seed + 7)
+    for _ in range(2):
+        sys_.apply_traffic_update(
+            perturb_weights(sys_.graph, rng, lo=0.6, hi=1.5))
+    g2 = sys_.graph
+    n = g2.num_vertices
+    ss = rng.integers(0, n, size=12)
+    ts = rng.integers(0, n, size=12)
+    got = sys_.query_loop(ss, ts)
+    np.testing.assert_array_equal(got, sys_.query_loop(ts, ss))
+    for i in range(0, 12, 3):
+        ref = float(dijkstra(g2, int(ss[i]))[int(ts[i])])
+        assert abs(got[i] - ref) <= 1e-3 * max(1.0, ref), (ss[i], ts[i])
+
+
 if HAVE_HYPOTHESIS:
     @st.composite
     def connected_graphs(draw, max_n=28):
@@ -164,6 +215,21 @@ if HAVE_HYPOTHESIS:
     @settings(**SETTINGS)
     def test_triangle_inequality_of_labels(gs):
         _check_label_query_symmetry(*gs)
+
+    @given(connected_graphs())
+    @settings(**SETTINGS)
+    def test_triangle_inequality_property(gs):
+        _check_triangle_inequality(*gs)
+
+    @given(connected_graphs())
+    @settings(**SETTINGS)
+    def test_path_consistency_property(gs):
+        _check_path_consistency(*gs)
+
+    @given(connected_graphs(max_n=20), st.integers(min_value=2, max_value=4))
+    @settings(max_examples=10, deadline=None)
+    def test_consistency_under_traffic_deltas(gs, m):
+        _check_consistency_under_deltas(*gs, m)
 else:
     @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
     def test_pll_2hop_cover_property(seed):
@@ -191,3 +257,16 @@ else:
     @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
     def test_triangle_inequality_of_labels(seed):
         _check_label_query_symmetry(*_random_connected_graph(seed))
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    def test_triangle_inequality_property(seed):
+        _check_triangle_inequality(*_random_connected_graph(seed))
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+    def test_path_consistency_property(seed):
+        _check_path_consistency(*_random_connected_graph(seed))
+
+    @pytest.mark.parametrize("seed", FALLBACK_SEEDS[:6])
+    def test_consistency_under_traffic_deltas(seed):
+        _check_consistency_under_deltas(
+            *_random_connected_graph(seed, max_n=20), 2 + seed % 3)

@@ -7,9 +7,11 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_smoke_config
+from repro.core import bfs_grow_partition, grid_road_network
+from repro.edge import EdgeSystem, FaultPlan
 from repro.models.lm import init_params
 from repro.serve import (BatchedDecoder, DistanceBatcher, DistanceRequest,
-                         Request)
+                         Request, ServingPolicy)
 
 
 def _echo_engine(calls):
@@ -159,6 +161,90 @@ def test_distance_batcher_max_queue_validation():
     import pytest
     with pytest.raises(ValueError, match="max_queue"):
         DistanceBatcher(_echo_engine([]), batch_size=4, max_queue=0)
+
+
+def test_distance_batcher_max_queue_boundary():
+    """max_queue=1 — the tightest legal bound: admission closes at
+    exactly the bound (not one past it) and reopens per drain."""
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=2, max_queue=1)
+    assert b.submit(DistanceRequest(rid=0, s=1, t=2)) is True
+    assert b.submit(DistanceRequest(rid=1, s=3, t=4)) is False
+    assert len(b.queue) == 1 and b.shed_count == 1
+    assert [r.rid for r in b.run()] == [0]
+    assert b.submit(DistanceRequest(rid=2, s=5, t=6)) is True
+    assert [r.rid for r in b.run()] == [0, 2]
+    assert b.latency_stats()["shed"] == 1
+    # boundary at max_queue == batch_size: a full group admits exactly
+    b2 = DistanceBatcher(_echo_engine([]), batch_size=4, max_queue=4)
+    assert b2.submit_pairs([(i, i) for i in range(5)]) == 4
+
+
+def test_distance_batcher_rerun_after_drain_is_noop():
+    """A second run() on the drained queue must not call the engine
+    again (empty-batch drain) and returns the same completed list."""
+    calls = []
+    b = DistanceBatcher(_echo_engine(calls), batch_size=4)
+    b.submit_pairs([(1, 2), (3, 4)])
+    done = b.run()
+    n_calls = len(calls)
+    assert b.run() == done and len(calls) == n_calls
+
+
+def test_distance_batcher_padding_under_shedding_service_path():
+    """Shed + pad through a DistanceService: a bounded queue drains as a
+    padded group whose rid=-1 dummies are masked out of the rule
+    counters — counters see exactly the admitted reals."""
+    g = grid_road_network(6, 6, seed=3)
+    part = bfs_grow_partition(g, 2, seed=1)
+    svc = EdgeSystem.deploy(g, part).service()
+    b = DistanceBatcher(svc, batch_size=8, max_queue=3)
+    admitted = b.submit_pairs([(i, (i * 7 + 3) % g.num_vertices)
+                               for i in range(9)])
+    assert admitted == 3 and b.shed_count == 6
+    done = b.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert sum(svc.stats[k] for k in ("rule1", "rule2", "rule3")) == 3
+    loop = svc.system.query_loop(np.array([r.s for r in done]),
+                                 np.array([r.t for r in done]))
+    np.testing.assert_array_equal(
+        np.array([r.distance for r in done], dtype=np.float32), loop)
+
+
+def test_distance_batcher_all_padding_mask_skips_counters():
+    """The warmup shape: service.submit with real=all-False computes
+    distances but bumps no counters (how OpenLoopLoadGen warms the
+    engine without polluting stats)."""
+    g = grid_road_network(6, 6, seed=3)
+    part = bfs_grow_partition(g, 2, seed=1)
+    svc = EdgeSystem.deploy(g, part).service()
+    zeros = np.zeros(8, dtype=np.int64)
+    out = svc.submit(zeros, zeros, real=np.zeros(8, dtype=bool))
+    np.testing.assert_array_equal(out.distances, np.zeros(8, np.float32))
+    assert sum(svc.stats[k] for k in ("rule1", "rule2", "rule3")) == 0
+
+
+def test_distance_batcher_faulted_service_flags_not_errors():
+    """Chaos meets the front door: a blackout FaultPlan behind the
+    batcher degrades answers (flagged by the service) but every real
+    request still completes — the batcher never sees an exception and
+    padding dummies stay invisible."""
+    g = grid_road_network(6, 6, seed=3)
+    part = bfs_grow_partition(g, 2, seed=1)
+    sys_ = EdgeSystem.deploy(g, part)
+    svc = sys_.service(ServingPolicy(
+        engine="scatter_gather",
+        faults=FaultPlan(seed=3, peer_drop_rate=1.0, center_down=True)))
+    b = DistanceBatcher(svc, batch_size=4)
+    b.submit_pairs([(i, g.num_vertices - 1 - i) for i in range(6)])
+    done = b.run()
+    assert len(done) == 6 and all(r.rid >= 0 for r in b.completed)
+    cross = part.assignment[[r.s for r in done]] \
+        != part.assignment[[r.t for r in done]]
+    assert cross.any()
+    dists = np.array([r.distance for r in done])
+    assert np.isinf(dists[cross]).all()       # degraded: flagged +inf
+    assert np.isfinite(dists[~cross]).all()   # local lanes stay exact
 
 
 def test_decoder_empty_queue_and_padding():

@@ -12,10 +12,10 @@ from repro.edge import EdgeSystem
 
 
 @pytest.fixture(scope="module")
-def system():
-    g = grid_road_network(8, 8, seed=11)
-    part = bfs_grow_partition(g, 4, seed=0)
-    return g, part, EdgeSystem.deploy(g, part)
+def system(small_system):
+    # session-scoped shared deploy (tests/conftest.py); read-only —
+    # mutating tests deploy their own systems
+    return small_system
 
 
 def test_batched_matches_loop_exactly(system):

@@ -22,10 +22,10 @@ SCATTER = ServingPolicy(engine="scatter_gather")
 
 
 @pytest.fixture(scope="module")
-def system():
-    g = grid_road_network(10, 10, seed=5)
-    part = bfs_grow_partition(g, 8, seed=1)
-    return g, part, EdgeSystem.deploy(g, part)
+def system(mesh8_system):
+    # session-scoped shared deploy (tests/conftest.py); read-only —
+    # mutating tests deploy their own systems
+    return mesh8_system
 
 
 def _batch(g, rng, size=512):

@@ -29,10 +29,10 @@ from repro.serve import (CERTIFY_OR_WAIT, STALE_OK, BucketedPlane,
 
 
 @pytest.fixture(scope="module")
-def system():
-    g = grid_road_network(10, 10, seed=5)
-    part = bfs_grow_partition(g, 8, seed=1)
-    return g, part, EdgeSystem.deploy(g, part)
+def system(mesh8_system):
+    # session-scoped shared deploy (tests/conftest.py); read-only —
+    # mutating tests below deploy their own systems
+    return mesh8_system
 
 
 def _batch(g, rng, size=512):
