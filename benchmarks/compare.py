@@ -36,10 +36,14 @@ import os
 import re
 import sys
 
-LOWER_IS_BETTER = ("us_per_call", "us", "ms", "s", "seconds", "bytes")
+LOWER_IS_BETTER = ("us_per_call", "us", "ms", "s", "seconds", "bytes",
+                   "bytes_ratio")
 HIGHER_IS_BETTER = ("qps", "goodput_qps", "speedup_x", "ratio")
 # any other unit (e.g. "info" for shed/stale fractions) is recorded but
-# not gated — direction depends on context the gate can't know
+# not gated — direction depends on context the gate can't know.
+# "bytes_ratio" (quantized ÷ float32 resident bytes) is deterministic
+# and lower-is-better, gated like "bytes" (tight tol, hard failure)
+BYTES_UNITS = ("bytes", "bytes_ratio")
 
 
 def load(path: str) -> dict:
@@ -87,10 +91,22 @@ def classify(unit: str) -> tuple[int, bool]:
     """(direction, is_timing): direction +1 = lower is better, -1 =
     higher is better, 0 = informational (not gated)."""
     if unit in LOWER_IS_BETTER:
-        return 1, unit != "bytes"
+        return 1, unit not in BYTES_UNITS
     if unit in HIGHER_IS_BETTER:
         return -1, True
     return 0, True
+
+
+# a bytes/quantization ratio MUST ride a gated unit ("bytes_ratio"):
+# emitting one as "info" would silently dodge the ±2 % bytes gate
+_RATIO_GUARD = re.compile(r"(?=.*ratio)(?=.*(bytes|quant))")
+
+
+def ungated_ratio(name: str, unit: str) -> bool:
+    """True when a row is named like a bytes/quantization ratio but its
+    unit is not gated in the bytes direction."""
+    return (_RATIO_GUARD.search(name.lower()) is not None
+            and unit not in BYTES_UNITS)
 
 
 def compare(current: dict, baseline: dict, *, latency_tol: float = 0.25,
@@ -108,10 +124,16 @@ def compare(current: dict, baseline: dict, *, latency_tol: float = 0.25,
     for name in sorted(set(base) - set(cur)):
         warnings.append(f"missing: {name} (present in baseline)")
     for name, row in sorted(cur.items()):
+        unit = row.get("unit", "us_per_call")
+        if ungated_ratio(name, unit):
+            failures.append(
+                f"{name}: unit {unit!r} is not bytes-gated — emit "
+                "quantization/bytes ratios with unit 'bytes_ratio' so "
+                "the ±2% bytes gate applies")
+            continue
         if name not in base:
             continue
         b, c = base[name]["value"], row["value"]
-        unit = row.get("unit", "us_per_call")
         direction, is_timing = classify(unit)
         if direction == 0:
             continue
@@ -120,7 +142,7 @@ def compare(current: dict, baseline: dict, *, latency_tol: float = 0.25,
                 failures.append(f"{name}: {unit} grew from 0 to {c:g}")
             continue
         rel = (c - b) / abs(b)
-        tol = (bytes_tol if unit == "bytes" else
+        tol = (bytes_tol if unit in BYTES_UNITS else
                throughput_tol if direction < 0 else latency_tol)
         regressed = rel > tol if direction > 0 else rel < -tol
         if not regressed:

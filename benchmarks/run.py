@@ -41,9 +41,10 @@ def main() -> None:
                     help="reduced sweeps (the CI smoke profile)")
     args = ap.parse_args()
 
-    from . import (bench_edge, bench_indexing, bench_kernels, bench_lm,
-                   bench_load, bench_oracle_sharding, bench_query,
-                   bench_scatter, bench_update)
+    from . import (bench_edge, bench_indexing, bench_ingest,
+                   bench_kernels, bench_lm, bench_load,
+                   bench_oracle_sharding, bench_query, bench_scatter,
+                   bench_update)
     suites = {
         "indexing": bench_indexing.run,   # Table 2
         "query": bench_query.run,         # Fig. 5
@@ -54,6 +55,7 @@ def main() -> None:
         "update": bench_update.run,       # incremental repair sweep
         "load": bench_load.run,           # open-loop million-user harness
         "scatter": bench_scatter.run,     # cross-edge scatter-gather plane
+        "ingest": bench_ingest.run,       # continent-scale ingest + quantize
     }
     sink = None
     if args.json:

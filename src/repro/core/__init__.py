@@ -18,6 +18,8 @@ from .local_index import LocalIndex, build_local_index, \
 from .query import (Rule, route, cross_district_query, same_district_query,
                     local_bound, certified_local_query, bucket_by_rule,
                     query_batch)
+from .quantize import (LABEL_DTYPES, QuantSpec, dtype_name, fit_label_spec,
+                       sentinel_of)
 from .oracle import DistanceOracle, BuildStats
 
 __all__ = [n for n in dir() if not n.startswith("_")]

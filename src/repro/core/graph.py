@@ -258,19 +258,14 @@ def _spanning_tree_mask(n: int, us: np.ndarray, vs: np.ndarray,
 
 
 def load_dimacs_gr(path: str) -> Graph:
-    """Parse a DIMACS challenge-9 ``.gr`` file (``a u v w`` arcs, 1-based)."""
-    us, vs, ws = [], [], []
-    n = 0
-    with open(path) as f:
-        for line in f:
-            if line.startswith("p"):
-                n = int(line.split()[2])
-            elif line.startswith("a"):
-                _, u, v, w = line.split()
-                us.append(int(u) - 1); vs.append(int(v) - 1)
-                ws.append(float(w))
-    return from_edges(n, np.array(us), np.array(vs),
-                      np.array(ws, dtype=np.float32))
+    """Parse a DIMACS challenge-9 ``.gr`` file (``a u v w`` arcs,
+    1-based).  Delegates to the streaming ``repro.ingest.dimacs``
+    reader — the one parser in the repo — which tolerates ``c``/``p``
+    lines anywhere, collapses duplicate arcs to the min weight, and
+    raises ``DimacsFormatError`` (with the line number) on 0-based or
+    out-of-range vertex ids."""
+    from ..ingest.dimacs import load_gr_graph   # deferred: ingest
+    return load_gr_graph(path)                  # imports core.graph
 
 
 def perturb_weights(g: Graph, rng: np.random.Generator,

@@ -45,6 +45,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.local_index import LocalIndex
+from ..core.quantize import QuantSpec
 from ..kernels.label_join import ops as lj
 from .sharded_oracle import (default_edge_mesh, make_sharded_query_fn,
                              pack_tables, prepare_queries)
@@ -58,6 +59,16 @@ INF = np.float32(np.inf)
 @functools.partial(jax.jit, static_argnames="use_pallas")
 def _engine_fn(table, rs, rt, use_pallas: bool):
     return lj.join(table[rs], table[rt], use_pallas=use_pallas)
+
+
+# Quantized twin: the table holds core.quantize codes; (sentinel, scale)
+# are static so the compiled program bakes the widening constants in.
+@functools.partial(jax.jit,
+                   static_argnames=("use_pallas", "sentinel", "scale"))
+def _engine_fn_quantized(table, rs, rt, use_pallas: bool,
+                         sentinel: int, scale: float):
+    return lj.join_quantized(table[rs], table[rt], sentinel=sentinel,
+                             scale=scale, use_pallas=use_pallas)
 
 
 def _pad_to_bucket(*cols: np.ndarray) -> list[np.ndarray]:
@@ -75,14 +86,20 @@ def _pad_to_bucket(*cols: np.ndarray) -> list[np.ndarray]:
 
 
 class BatchedQueryEngine:
-    """Vectorized §4.2 serving over a fixed index version."""
+    """Vectorized §4.2 serving over a fixed index version.
+
+    ``quant`` stores the combined table as ``core.quantize`` codes
+    (half the resident bytes; bit-for-bit answers for a lossless
+    spec)."""
 
     def __init__(self, btable: np.ndarray, locals_: list[LocalIndex],
-                 assignment: np.ndarray, use_pallas: bool | None = None):
+                 assignment: np.ndarray, use_pallas: bool | None = None,
+                 quant: QuantSpec | None = None):
         # single-shard blocked packing == the combined replicated layout:
         # district rows d·kmax + local(v), then B at rows m·kmax + v
         self.data = pack_tables(btable, locals_, assignment, num_devices=1,
-                                combined=True)
+                                combined=True, quant=quant)
+        self.quant = quant
         self._table = jnp.asarray(self.data.combined_table)
         self.data.release_host_tables()     # device copy is authoritative
         if use_pallas is None:          # Pallas kernel on accelerators,
@@ -90,7 +107,7 @@ class BatchedQueryEngine:
         self.use_pallas = use_pallas
 
     def size_bytes(self) -> int:
-        return int(self._table.size * 4)
+        return int(self._table.size * self._table.dtype.itemsize)
 
     def row_ids(self, ss: np.ndarray, ts: np.ndarray
                 ) -> tuple[np.ndarray, np.ndarray]:
@@ -108,7 +125,14 @@ class BatchedQueryEngine:
         if qn == 0:
             return np.zeros(0, dtype=np.float32)
         rs, rt = _pad_to_bucket(*self.row_ids(ss, ts))
-        out = _engine_fn(self._table, rs, rt, use_pallas=self.use_pallas)
+        if self.quant is None:
+            out = _engine_fn(self._table, rs, rt,
+                             use_pallas=self.use_pallas)
+        else:
+            sent, scale = self.quant.key()
+            out = _engine_fn_quantized(self._table, rs, rt,
+                                       use_pallas=self.use_pallas,
+                                       sentinel=sent, scale=scale)
         return np.asarray(out)[:qn]
 
     __call__ = query
@@ -138,21 +162,24 @@ class ShardedBatchedEngine:
     def __init__(self, btable: np.ndarray, locals_: list[LocalIndex],
                  assignment: np.ndarray, mesh: Mesh | None = None,
                  axis: str = "edge", use_pallas: bool | None = None,
-                 shard_border: bool = False):
+                 shard_border: bool = False,
+                 quant: QuantSpec | None = None):
         if mesh is None:
             mesh = default_edge_mesh(axis=axis)
         self.mesh = mesh
         self.axis = axis
         self.num_devices = mesh.shape[axis]
         self.shard_border = shard_border
+        self.quant = quant
         self.data = pack_tables(btable, locals_, assignment,
                                 self.num_devices,
-                                shard_border=shard_border)
+                                shard_border=shard_border, quant=quant)
         if use_pallas is None:
             use_pallas = jax.default_backend() != "cpu"
         self.use_pallas = use_pallas
-        self._fn = make_sharded_query_fn(mesh, axis, use_pallas,
-                                         shard_border=shard_border)
+        self._fn = make_sharded_query_fn(
+            mesh, axis, use_pallas, shard_border=shard_border,
+            quant=quant.key() if quant is not None else None)
         self._table = jax.device_put(self.data.district_table,
                                      NamedSharding(mesh, P(axis)))
         bspec = P(self.axis) if shard_border else P()
@@ -166,8 +193,9 @@ class ShardedBatchedEngine:
         return self.data.district_bytes_per_device()
 
     def border_table_bytes_per_device(self) -> int:
-        """Resident bytes of B on each device: ``n·q·4`` replicated,
-        ``ceil(n/E)·q·4`` row-sharded."""
+        """Resident bytes of B on each device: ``n·q`` entries
+        replicated, ``ceil(n/E)·q`` row-sharded, times the storage
+        itemsize (4 float32, 2 quantized)."""
         return self.data.border_bytes_per_device()
 
     def size_bytes(self) -> int:

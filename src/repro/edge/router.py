@@ -47,6 +47,12 @@ _SELF = object()
 # ``EdgeSystem.shard_border``)
 SHARD_BORDER_AUTO_BYTES = 64 << 20
 
+# auto-pick threshold for quantized label storage: once the float32
+# index footprint (B + dense district tables) crosses this, the engines
+# store uint16 codes instead — but ONLY when the fitted spec is lossless
+# (integer-second weights), so auto never changes a single answer
+QUANT_AUTO_BYTES = 32 << 20
+
 
 @dataclass
 class EdgeSystem:
@@ -65,6 +71,11 @@ class EdgeSystem:
     # SHARD_BORDER_AUTO_BYTES), True/False = force sharded/replicated B.
     # Only consulted when the sharded engine is selected.
     shard_border: bool | None = None
+    # label storage dtype: None/"auto" = float32 until the index crosses
+    # QUANT_AUTO_BYTES and the fitted uint16 spec is lossless;
+    # "float32" / "uint16" / "int16" force the storage (an explicit
+    # integer dtype is honored even when the fit is lossy)
+    label_dtype: str | None = None
     # steady-state serving engine, snapshot of one index version
     _engine: object | None = field(default=None, repr=False)
     _engine_key: tuple | None = field(default=None, repr=False)
@@ -161,7 +172,30 @@ class EdgeSystem:
         for k, v in counters.items():
             self.stats[k] += v
 
-    def _current_engine(self, prefer_sharded=_SELF, shard_border=_SELF):
+    def _resolve_quant(self, label_dtype):
+        """Map a ``label_dtype`` knob value to the QuantSpec the planes
+        pack with (None ⇒ float32 storage).  Auto quantizes only when
+        the float32 index footprint crosses QUANT_AUTO_BYTES AND the
+        fitted uint16 spec round-trips losslessly — so turning auto on
+        can never change an answer.  An explicit integer dtype is
+        honored even when lossy (the caller asked for the bytes)."""
+        from ..core.quantize import LABEL_DTYPES, fit_label_spec
+        if label_dtype == "float32":
+            return None
+        btable = self.center.border_labels.table
+        locals_ = [srv.augmented for srv in self.servers]
+        if label_dtype in (None, "auto"):
+            est = 4 * (btable.size
+                       + sum(len(li.vertices) ** 2 for li in locals_))
+            if est <= QUANT_AUTO_BYTES:
+                return None
+            spec = fit_label_spec(btable, locals_)
+            return spec if spec.lossless else None
+        return fit_label_spec(btable, locals_,
+                              dtype=LABEL_DTYPES[label_dtype])
+
+    def _current_engine(self, prefer_sharded=_SELF, shard_border=_SELF,
+                        label_dtype=_SELF):
         """Engine snapshot for the current index version, or None while
         any district's shortcuts are stale (rebuild window). Single-device
         backends get the replicated ``BatchedQueryEngine``; multi-device
@@ -169,14 +203,17 @@ class EdgeSystem:
         (``ShardedBatchedEngine``) so the table scales past one device's
         memory, and within the sharded engine B itself is row-sharded
         once its replicated footprint crosses SHARD_BORDER_AUTO_BYTES.
-        ``prefer_sharded`` / ``shard_border`` override the auto choices
-        (arguments take precedence over the instance attributes; the
-        request plane passes its ``ServingPolicy`` placement through
-        them)."""
+        ``label_dtype`` picks the storage dtype (see ``_resolve_quant``).
+        ``prefer_sharded`` / ``shard_border`` / ``label_dtype`` override
+        the auto choices (arguments take precedence over the instance
+        attributes; the request plane passes its ``ServingPolicy``
+        placement through them)."""
         if prefer_sharded is _SELF:
             prefer_sharded = self.prefer_sharded
         if shard_border is _SELF:
             shard_border = self.shard_border
+        if label_dtype is _SELF:
+            label_dtype = self.label_dtype
         if any(srv.augmented is None
                or srv.augmented_version != self.center.version
                for srv in self.servers):
@@ -191,9 +228,11 @@ class EdgeSystem:
             if shard_border is None else shard_border)
         key = (self.center.version,
                tuple(srv.augmented_version for srv in self.servers),
-               sharded, shard_border, num_devices)
+               sharded, shard_border, num_devices,
+               label_dtype or "auto")
         if self._engine is None or self._engine_key != key:
             from .engine import BatchedQueryEngine, ShardedBatchedEngine
+            quant = self._resolve_quant(label_dtype)
             # drop the stale engine's device buffers BEFORE building the
             # replacement: holding both doubles peak device memory at
             # every rebuild, exactly where sharded tables run near limits
@@ -203,11 +242,12 @@ class EdgeSystem:
             if sharded:
                 self._engine = ShardedBatchedEngine(
                     btable, [srv.augmented for srv in self.servers],
-                    self.partition.assignment, shard_border=shard_border)
+                    self.partition.assignment, shard_border=shard_border,
+                    quant=quant)
             else:
                 self._engine = BatchedQueryEngine(
                     btable, [srv.augmented for srv in self.servers],
-                    self.partition.assignment)
+                    self.partition.assignment, quant=quant)
             self._engine_key = key
         return self._engine
 
@@ -218,7 +258,7 @@ class EdgeSystem:
         ``size_bytes()`` footprint."""
         return self._current_engine()
 
-    def _current_scatter_plane(self, faults=None):
+    def _current_scatter_plane(self, faults=None, label_dtype=_SELF):
         """Scatter-gather coordinator plane for the current index
         version, or None during a rebuild window (same freshness rule as
         ``_current_engine``).  Building the plane pushes each server its
@@ -226,7 +266,11 @@ class EdgeSystem:
         and persist on the servers across plane rebuilds of the same
         version.  ``faults`` (an ``edge.faults.FaultPlan``) attaches a
         deterministic injector; the plan is part of the cache key, so
-        switching plans rebuilds the plane (and its injector epoch)."""
+        switching plans rebuilds the plane (and its injector epoch).
+        ``label_dtype`` stores the plane's tables as quantized codes
+        exactly like the engines (see ``_resolve_quant``)."""
+        if label_dtype is _SELF:
+            label_dtype = self.label_dtype
         if any(srv.augmented is None
                or srv.augmented_version != self.center.version
                for srv in self.servers):
@@ -235,12 +279,14 @@ class EdgeSystem:
             faults = None
         key = (self.center.version,
                tuple(srv.augmented_version for srv in self.servers),
-               faults)
+               faults, label_dtype or "auto")
         if self._scatter is None or self._scatter_key != key:
             from .scatter_gather import ScatterGatherPlane
+            quant = self._resolve_quant(label_dtype)
             self._scatter = None
             self._scatter = ScatterGatherPlane.from_system(self,
-                                                           faults=faults)
+                                                           faults=faults,
+                                                           quant=quant)
             self._scatter_key = key
         return self._scatter
 

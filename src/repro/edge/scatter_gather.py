@@ -57,6 +57,7 @@ import jax
 import numpy as np
 
 from ..core.local_index import LocalIndex
+from ..core.quantize import QuantSpec
 from ..kernels.label_join import ops as lj
 from .server import EdgeServer
 from .sharded_oracle import pack_tables, prepare_queries
@@ -97,6 +98,11 @@ class ScatterGatherPlane:
     # request plane lifts these into ResultBatch via getattr
     exactness_codes: np.ndarray | None = field(default=None, repr=False)
     degraded: np.ndarray | None = field(default=None, repr=False)
+    # set ⇒ the district block and the per-server border views hold
+    # core.quantize codes (2 bytes/entry on every host); rows are
+    # dequantized per batch in _gather, so a lossless spec keeps the
+    # plane bit-for-bit with the engines
+    quant: QuantSpec | None = field(default=None, repr=False)
 
     def __post_init__(self):
         if not self._stale_held:
@@ -105,7 +111,9 @@ class ScatterGatherPlane:
     @classmethod
     def from_system(cls, system: "EdgeSystem",
                     use_pallas: bool | None = None,
-                    faults=None) -> "ScatterGatherPlane":
+                    faults=None,
+                    quant: QuantSpec | None = None
+                    ) -> "ScatterGatherPlane":
         """Build from a deployed system: the center pushes each server
         its own district's B rows (the build-path role it keeps), then
         the coordinator packs the same blocked layout the sharded engine
@@ -120,7 +128,7 @@ class ScatterGatherPlane:
         plane = cls.build(center.border_labels.table,
                           [srv.augmented for srv in system.servers],
                           system.partition.assignment, system.servers,
-                          version, use_pallas=use_pallas)
+                          version, use_pallas=use_pallas, quant=quant)
         plane.center = center
         if faults is not None and getattr(faults, "enabled", False):
             from .faults import FaultInjector
@@ -131,9 +139,11 @@ class ScatterGatherPlane:
     def build(cls, btable: np.ndarray, locals_: list[LocalIndex],
               assignment: np.ndarray, servers: list[EdgeServer],
               version: int,
-              use_pallas: bool | None = None) -> "ScatterGatherPlane":
+              use_pallas: bool | None = None,
+              quant: QuantSpec | None = None) -> "ScatterGatherPlane":
         m = len(locals_)
-        data = pack_tables(btable, locals_, assignment, num_devices=m)
+        data = pack_tables(btable, locals_, assignment, num_devices=m,
+                           quant=quant)
         q = data.border_width
         # the coordinator holds NO border rows — rule-3 gathers read the
         # servers' exchanged stores, so drop the packed full-B copy
@@ -141,16 +151,30 @@ class ScatterGatherPlane:
         return cls(servers, version,
                    (jax.default_backend() != "cpu"
                     if use_pallas is None else use_pallas),
-                   data, q, [None] * m, [set() for _ in range(m)])
+                   data, q, [None] * m, [set() for _ in range(m)],
+                   quant=quant)
 
     # -- border-row assembly -------------------------------------------------
 
     def _bview(self, d: int) -> np.ndarray:
         if self._bviews[d] is None:
-            self._bviews[d] = np.full(
-                (self.data.num_vertices, self.border_width), INF,
-                dtype=np.float32)
+            if self.quant is None:
+                self._bviews[d] = np.full(
+                    (self.data.num_vertices, self.border_width), INF,
+                    dtype=np.float32)
+            else:
+                self._bviews[d] = np.full(
+                    (self.data.num_vertices, self.border_width),
+                    self.quant.sentinel, dtype=self.quant.dtype)
         return self._bviews[d]
+
+    def _install_rows(self, d: int, verts: np.ndarray,
+                      rows: np.ndarray) -> None:
+        """Scatter exchanged float32 B rows into server ``d``'s view
+        (quantizing on arrival when the plane stores codes)."""
+        if self.quant is not None:
+            rows = self.quant.quantize(rows)
+        self._bview(d)[verts] = rows
 
     def _ensure_rows(self, d: int, districts: np.ndarray) -> None:
         """Make sure server ``d`` holds the B rows of every district in
@@ -167,26 +191,30 @@ class ScatterGatherPlane:
                     self.exchange_stats["exchanges"] += 1
                     self.exchange_stats["rows_exchanged"] += moved
             verts, rows = srv.border_rows_of(j)
-            self._bview(d)[verts] = rows
+            self._install_rows(d, verts, rows)
             held.add(j)
 
     def _gather(self, d: int, rows: np.ndarray) -> np.ndarray:
         """Assemble server ``d``'s (batch, W) join rows: district-block
         rows for local row ids, held border rows (inf-padded from the
         natural width q to W) for the rest — the same per-batch padding
-        ``join_sharded_gathered`` applies on device."""
+        ``join_sharded_gathered`` applies on device.  A quantized plane
+        stores codes and dequantizes the few gathered rows here (exact
+        for a lossless spec), so the partial join itself is unchanged."""
         kmax = self.data.kmax
         width = self.data.width
+        dec = ((lambda a: a) if self.quant is None
+               else self.quant.dequantize)
         block = self.data.district_table[d * kmax:(d + 1) * kmax]
         local = rows < kmax
         out = np.empty((len(rows), width), dtype=np.float32)
-        out[local] = block[rows[local]]
+        out[local] = dec(block[rows[local]])
         cross = ~local
         if cross.any():
             gid = rows[cross] - kmax
             padded = np.full((int(cross.sum()), width), INF,
                              dtype=np.float32)
-            padded[:, :self.border_width] = self._bview(d)[gid]
+            padded[:, :self.border_width] = dec(self._bview(d)[gid])
             out[cross] = padded
         return out
 
@@ -249,7 +277,7 @@ class ScatterGatherPlane:
             # own slice, or already cached server-side: no network hop,
             # so no fault can apply (also how a stale view heals)
             verts, rows = srv.border_rows_of(j)
-            self._bview(d)[verts] = rows
+            self._install_rows(d, verts, rows)
             held.add(j)
             stale_held.discard(j)
             return "ok"
@@ -265,7 +293,7 @@ class ScatterGatherPlane:
                     st["exchanges"] += 1
                     st["rows_exchanged"] += outc.moved
                 verts, rows = srv.border_rows_of(j)
-                self._bview(d)[verts] = rows
+                self._install_rows(d, verts, rows)
                 held.add(j)
                 stale_held.discard(j)
                 return "ok"
@@ -277,7 +305,7 @@ class ScatterGatherPlane:
             if stale is not None and \
                     stale[1].shape[1] == self.border_width:
                 verts, rows = stale
-                self._bview(d)[verts] = rows
+                self._install_rows(d, verts, rows)
                 held.add(j)
                 stale_held.add(j)
         return "stale" if j in held else fault
@@ -416,9 +444,11 @@ class ScatterGatherPlane:
 
     def size_bytes(self) -> int:
         """Host-resident bytes across the coordinator + servers: the
-        blocked district tables plus every allocated border-row view."""
-        total = int(self.data.district_table.size * 4)
+        blocked district tables plus every allocated border-row view
+        (both in the storage dtype — 2 bytes/entry quantized)."""
+        table = self.data.district_table
+        total = int(table.size * table.dtype.itemsize)
         for view in self._bviews:
             if view is not None:
-                total += int(view.size * 4)
+                total += int(view.size * view.dtype.itemsize)
         return total

@@ -57,6 +57,7 @@ except AttributeError:                  # jax 0.4.x
 from ..core.labels import BorderLabels
 from ..core.local_index import LocalIndex
 from ..core.partition import Partition
+from ..core.quantize import QuantSpec
 from ..kernels.label_join import ops as lj
 
 INF = np.float32(np.inf)
@@ -71,8 +72,8 @@ class ShardedOracleData:
     except in the ``combined=True`` single-buffer layout; with
     ``border_sharded`` its rows are padded to ``ceil(n/E)·E`` so the
     leading axis shards evenly over the mesh too."""
-    district_table: np.ndarray | None  # (m_pad·kmax, W) f32 — shardable
-    btable: np.ndarray | None   # (n_pad, q) f32 — center table B
+    district_table: np.ndarray | None  # (m_pad·kmax, W) — shardable
+    btable: np.ndarray | None   # (n_pad, q) — center table B
     local_pos: np.ndarray       # (n,) int64: global id → local slot
     assignment: np.ndarray      # (n,) int64: global id → district
     kmax: int
@@ -86,6 +87,7 @@ class ShardedOracleData:
     border_width: int = field(init=False)
     border_rows_per_device: int = field(init=False)
     num_vertices: int = field(init=False)
+    itemsize: int = field(init=False)
     # single-allocation [districts; B] buffer (combined=True packing);
     # district_table/btable are views into it — the replicated engine
     # ships this to the device without a second host copy
@@ -93,6 +95,9 @@ class ShardedOracleData:
     # True ⇒ btable is a row-sharded (n_pad, q) layout: device d owns
     # rows d·rpd .. d·rpd+rpd-1 (rpd = ceil(n/E))
     border_sharded: bool = False
+    # set ⇒ tables hold quantized integer codes (core.quantize); the
+    # device joins are handed quant.key() and answers stay float32
+    quant: QuantSpec | None = None
 
     def __post_init__(self):
         self.districts_per_device = (self.district_table.shape[0]
@@ -103,6 +108,7 @@ class ShardedOracleData:
             self.btable.shape[0] // self.num_devices
             if self.border_sharded else self.btable.shape[0])
         self.num_vertices = len(self.local_pos)
+        self.itemsize = int(self.district_table.dtype.itemsize)
 
     @property
     def cross_base(self) -> int:
@@ -119,12 +125,16 @@ class ShardedOracleData:
         self.combined_table = None
 
     def district_bytes_per_device(self) -> int:
-        return self.districts_per_device * self.kmax * self.width * 4
+        return (self.districts_per_device * self.kmax * self.width
+                * self.itemsize)
 
     def border_bytes_per_device(self) -> int:
-        """Resident bytes of B per device: all ``n·q·4`` when replicated
-        (natural width), a ``ceil(n/E)·q·4`` row-slice when sharded."""
-        return self.border_rows_per_device * self.border_width * 4
+        """Resident bytes of B per device: all ``n·q`` entries when
+        replicated (natural width), a ``ceil(n/E)·q`` row-slice when
+        sharded — times the storage itemsize (4 for float32, 2
+        quantized)."""
+        return (self.border_rows_per_device * self.border_width
+                * self.itemsize)
 
     def bytes_per_device(self) -> int:
         """Resident bytes per device: district block + this device's
@@ -136,7 +146,8 @@ class ShardedOracleData:
 def pack_tables(btable: np.ndarray, locals_: list[LocalIndex],
                 assignment: np.ndarray, num_devices: int, *,
                 combined: bool = False,
-                shard_border: bool = False) -> ShardedOracleData:
+                shard_border: bool = False,
+                quant: QuantSpec | None = None) -> ShardedOracleData:
     """Blocked packing of the combined hub-aligned table: districts padded
     to ``m_pad = dpd·E`` so the leading axis shards evenly, every district
     table densified to (kmax, W) with the same inf padding the replicated
@@ -151,7 +162,12 @@ def pack_tables(btable: np.ndarray, locals_: list[LocalIndex],
     ``combined=True`` lays districts and B out in ONE allocation (the
     replicated engine's device layout, B padded to W there) so no second
     host copy is needed to stack them; ``district_table``/``btable``
-    become views."""
+    become views.
+
+    ``quant`` switches the storage dtype: tables hold ``core.quantize``
+    codes (2 bytes/entry) and every padding element is the dtype's
+    sentinel — the quantized image of +inf, so padding lanes still
+    never win the join."""
     assert not (combined and shard_border), \
         "combined packing keeps B inside the single replicated buffer"
     n = len(assignment)
@@ -162,40 +178,49 @@ def pack_tables(btable: np.ndarray, locals_: list[LocalIndex],
     q = btable.shape[1]
     width = max(kmax, q, 1)
     rows = m_pad * kmax
+    if quant is None:
+        dtype, fill = np.dtype(np.float32), INF
+        enc = lambda a: np.asarray(a, dtype=np.float32)  # noqa: E731
+    else:
+        dtype, fill = quant.dtype, quant.dtype.type(quant.sentinel)
+        enc = quant.quantize
     if combined:
-        buf = np.full((rows + n, width), INF, dtype=np.float32)
+        buf = np.full((rows + n, width), fill, dtype=dtype)
         table, bt = buf[:rows], buf[rows:]
-        bt[:, :q] = btable
+        bt[:, :q] = enc(btable)
     else:
         buf = None
-        table = np.full((rows, width), INF, dtype=np.float32)
+        table = np.full((rows, width), fill, dtype=dtype)
         if shard_border:
             n_pad = -(-n // num_devices) * num_devices
-            bt = np.empty((n_pad, q), dtype=np.float32)
-            bt[:n] = btable
-            bt[n:] = INF
-        else:
+            bt = np.empty((n_pad, q), dtype=dtype)
+            bt[:n] = enc(btable)
+            bt[n:] = fill
+        elif quant is None:
             # zero-copy when the caller's B is already f32-contiguous:
             # pack never mutates it and the engines device_put + release
             bt = np.ascontiguousarray(btable, dtype=np.float32)
+        else:
+            bt = enc(btable)
     local_pos = np.zeros(n, dtype=np.int64)
     for i, li in enumerate(locals_):
         k = len(li.vertices)
-        table[i * kmax:i * kmax + k, :k] = li.dense_table()
+        table[i * kmax:i * kmax + k, :k] = enc(li.dense_table())
         local_pos[li.vertices] = np.arange(k, dtype=np.int64)
     return ShardedOracleData(table, bt, local_pos,
                              assignment.astype(np.int64), kmax,
                              num_devices, m, combined_table=buf,
-                             border_sharded=shard_border)
+                             border_sharded=shard_border, quant=quant)
 
 
 def pack_for_mesh(part: Partition, bl: BorderLabels,
                   locals_: list[LocalIndex], num_devices: int, *,
-                  shard_border: bool = False) -> ShardedOracleData:
+                  shard_border: bool = False,
+                  quant: QuantSpec | None = None) -> ShardedOracleData:
     """Paper-facing wrapper: pack a built index for an E-device edge mesh."""
     return pack_tables(bl.table.astype(np.float32), locals_,
                        part.assignment, num_devices,
-                       shard_border=shard_border)
+                       shard_border=shard_border, quant=quant)
 
 
 def prepare_queries(data: ShardedOracleData, ss: np.ndarray,
@@ -219,14 +244,17 @@ _FN_CACHE: dict = {}
 
 def make_sharded_query_fn(mesh: Mesh, axis: str = "edge",
                           use_pallas: bool = False,
-                          shard_border: bool = False):
+                          shard_border: bool = False,
+                          quant: tuple[int, float] | None = None):
     """Jitted ``fn(district_block, btable, owner, rs, rt)`` bound to
     ``mesh``: per-device dense gather-join over [block; B] + one pmin.
     With ``shard_border`` the btable argument is the row-sharded B and
-    the touched rows are assembled by ragged gather + pmin first. Cached
-    per (mesh, axis, use_pallas, shard_border) so engine rebuilds after
-    traffic updates reuse the compiled program."""
-    key = (mesh, axis, use_pallas, shard_border)
+    the touched rows are assembled by ragged gather + pmin first.
+    ``quant`` is a ``QuantSpec.key()`` pair when the tables hold
+    quantized codes. Cached per (mesh, axis, use_pallas, shard_border,
+    quant) so engine rebuilds after traffic updates reuse the compiled
+    program."""
+    key = (mesh, axis, use_pallas, shard_border, quant)
     if key in _FN_CACHE:
         return _FN_CACHE[key]
 
@@ -234,11 +262,13 @@ def make_sharded_query_fn(mesh: Mesh, axis: str = "edge",
         def _device_fn(table, bshard, owner, rs, rt):
             return lj.join_sharded_border_gathered(
                 table, bshard, owner, rs, rt,
-                axis=axis, use_pallas=use_pallas)
+                axis=axis, use_pallas=use_pallas, quant=quant)
     else:
         def _device_fn(table, btable, owner, rs, rt):
             return lj.join_sharded_gathered(table, btable, owner, rs, rt,
-                                            axis=axis, use_pallas=use_pallas)
+                                            axis=axis,
+                                            use_pallas=use_pallas,
+                                            quant=quant)
 
     sharded = _shard_map(
         _device_fn, mesh=mesh,
@@ -274,8 +304,9 @@ def sharded_query(data: ShardedOracleData, mesh: Mesh,
     tables device-resident across batches."""
     if use_pallas is None:
         use_pallas = jax.default_backend() != "cpu"
-    fn = make_sharded_query_fn(mesh, axis, use_pallas,
-                               shard_border=data.border_sharded)
+    fn = make_sharded_query_fn(
+        mesh, axis, use_pallas, shard_border=data.border_sharded,
+        quant=data.quant.key() if data.quant is not None else None)
     dev_sharding = NamedSharding(mesh, P(axis))
     rep = NamedSharding(mesh, P())
     table = jax.device_put(data.district_table, dev_sharding)

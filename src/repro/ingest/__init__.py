@@ -1,0 +1,29 @@
+"""Continent-scale ingest: streaming CSR construction for real road
+networks.
+
+The pipeline turns an arc stream (a chunked DIMACS ``.gr`` reader, the
+synthetic-continent generator, or any ``(u, v, w)`` chunk source) into
+the int32 CSR layout every builder consumes, with optional uint16
+travel-time quantization applied *during* accumulation so a
+continent-sized arc store never materializes in float32:
+
+* ``csr`` — ``CSRBuilder`` (chunked arc accumulator → dedup-min →
+  ``CSRArrays`` with int32 ``indptr``/``indices``) and ``CSRArrays``
+  (``to_graph()`` hands the dequantized float32 ``core.Graph`` to the
+  existing stack);
+* ``dimacs`` — chunked challenge-9 ``.gr`` reader (``iter_gr``,
+  ``load_gr_csr``, ``load_gr_graph``) that tolerates comment/problem
+  lines anywhere, collapses duplicate arcs to the min weight, and
+  rejects 0-based or out-of-range vertex ids with a clear error;
+* ``synth`` — ``synthetic_continent``: a deterministic seeded district
+  mosaic (10⁵–10⁶ vertices, integer-second weights) so CI exercises
+  road-network-shaped inputs without downloads;
+* ``datasets`` — checksum-pinned registry of the DIMACS USA extracts
+  with an **opt-in** fetch path (never contacted by tests or CI).
+"""
+from .csr import CSRArrays, CSRBuilder
+from .dimacs import DimacsFormatError, iter_gr, load_gr_csr, load_gr_graph
+from .synth import synthetic_continent
+from .datasets import DATASETS, DatasetSpec, dataset_path, fetch, sha256_of
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -19,6 +19,16 @@ Paper map (anchors refer to PAPER.md / the source paper):
   is row-sharded, the touched rows are assembled with a ragged
   gather + ``pmin`` collective, then joined exactly like the replicated
   case. No structure in the serving path is replicated anymore.
+* ``join_quantized`` / ``join_quantized_gathered`` — the same joins over
+  uint16/int16 ``core.quantize`` codes: loads stay narrow in HBM, the
+  accumulate widens (int32 on the XLA path, exact float32 into the
+  existing pallas kernel), the sentinel is the absorbing +inf, and the
+  min runs in RAW code units with one final ``· scale`` — so a lossless
+  spec serves bit-for-bit the float32 answers at half the bytes. The
+  ``quant=`` kwarg threads the same through both sharded entry points;
+  in the B-sharded ragged assembly the cross-device ``pmin`` then runs
+  directly on the 2-byte codes (the sentinel doubles as the min
+  identity), halving the collective traffic too.
 * ``join_partial_gathered`` — the per-edge-server half of the scatter-
   gather read path (``edge/scatter_gather.py``): one server's min-plus
   partial over pre-assembled label rows (its own district block plus
@@ -39,6 +49,12 @@ from .ref import join_ref, join_sparse_ref, local_bound_ref
 # multiple of PAD_Q keeps the number of distinct jit shapes (and hence
 # retraces) bounded no matter how the router buckets a batch.
 PAD_Q = 256
+
+# int32 stand-in for +inf in the quantized XLA accumulate: large enough
+# that no finite code sum (≤ 2·65534) reaches it, small enough that
+# INF_I32 + INF_I32 still fits int32 (1<<30 < 2^31), so a sum of two
+# sentinels can never wrap negative and steal the min.
+INF_I32 = 1 << 29
 
 
 def _on_cpu() -> bool:
@@ -66,6 +82,45 @@ def join_with_bound(s_rows: jnp.ndarray, t_rows: jnp.ndarray, *,
     return join_ref(s_rows, t_rows), local_bound_ref(s_rows, t_rows)
 
 
+def _widen_f32(codes: jnp.ndarray, sentinel: int) -> jnp.ndarray:
+    """uint16/int16 codes -> float32 raw values with sentinel -> +inf.
+    Exact: codes < 2^16 ≪ 2^24, so every value (and every pairwise sum)
+    is exactly representable in float32."""
+    return jnp.where(codes == sentinel, jnp.inf,
+                     codes.astype(jnp.float32))
+
+
+def join_quantized(s_codes: jnp.ndarray, t_codes: jnp.ndarray, *,
+                   sentinel: int, scale: float,
+                   use_pallas: bool = True) -> jnp.ndarray:
+    """Dense 2-hop join over quantized label rows (``core.quantize``
+    codes), returning float32 distances.
+
+    Both paths reduce in RAW code units and multiply by ``scale`` once
+    at the end, so they are bitwise identical to each other — and, for
+    a lossless spec (scale = 1 on integral weights), bitwise identical
+    to the float32 ``join`` on the dequantized rows:
+
+    * pallas: widen codes to exact float32 (sentinel → +inf) and reuse
+      the existing f32 kernel — no second kernel to maintain, and
+      +inf · scale = +inf keeps the sentinel an absorbing element;
+    * XLA: widen to an int32 accumulate (sentinel → ``INF_I32``), min
+      the integer sums, then map ≥ INF_I32 back to +inf.
+    """
+    if use_pallas:
+        raw = join_pallas(_widen_f32(s_codes, sentinel),
+                          _widen_f32(t_codes, sentinel),
+                          interpret=_on_cpu())
+        return raw * jnp.float32(scale)
+    s = jnp.where(s_codes == sentinel, INF_I32,
+                  s_codes.astype(jnp.int32))
+    t = jnp.where(t_codes == sentinel, INF_I32,
+                  t_codes.astype(jnp.int32))
+    m = jnp.min(s + t, axis=1)
+    return jnp.where(m >= INF_I32, jnp.inf,
+                     m.astype(jnp.float32) * jnp.float32(scale))
+
+
 def join_sparse(hs, ds, ht, dt) -> jnp.ndarray:
     """Padded sparse-label join (local indexes); pure-XLA — the O(L²)
     mask fits VREGs for the small local label widths."""
@@ -89,6 +144,27 @@ def join_gathered(table: np.ndarray, ss: np.ndarray, ts: np.ndarray, *,
     t_rows[:qn] = table[ts]
     out = join(jnp.asarray(s_rows), jnp.asarray(t_rows),
                use_pallas=use_pallas)
+    return np.asarray(out)[:qn]
+
+
+def join_quantized_gathered(table: np.ndarray, ss: np.ndarray,
+                            ts: np.ndarray, *, sentinel: int,
+                            scale: float,
+                            use_pallas: bool = True) -> np.ndarray:
+    """Quantized twin of ``join_gathered``: the table holds integer
+    codes and the batch is padded with the sentinel (the quantized
+    +inf, which never wins the min) instead of float +inf."""
+    qn = len(ss)
+    if qn == 0 or table.shape[1] == 0:
+        return np.full(qn, np.inf, dtype=np.float32)
+    qp = _ceil_to(qn, PAD_Q)
+    s_rows = np.full((qp, table.shape[1]), sentinel, dtype=table.dtype)
+    t_rows = np.full((qp, table.shape[1]), sentinel, dtype=table.dtype)
+    s_rows[:qn] = table[ss]
+    t_rows[:qn] = table[ts]
+    out = join_quantized(jnp.asarray(s_rows), jnp.asarray(t_rows),
+                         sentinel=sentinel, scale=scale,
+                         use_pallas=use_pallas)
     return np.asarray(out)[:qn]
 
 
@@ -135,22 +211,30 @@ def join_sparse_gathered(hubs: np.ndarray, dists: np.ndarray,
 def join_sharded_gathered(block: jnp.ndarray, btable: jnp.ndarray,
                           owner: jnp.ndarray, rs: jnp.ndarray,
                           rt: jnp.ndarray, *, axis: str,
-                          use_pallas: bool = True) -> jnp.ndarray:
+                          use_pallas: bool = True,
+                          quant: tuple[int, float] | None = None
+                          ) -> jnp.ndarray:
     """Per-device half of the mesh-sharded serving join; runs INSIDE a
     ``shard_map`` over ``axis``. ``block`` is this device's slice of the
     district tables (width W), ``btable`` the replicated border table at
-    its *natural* width q ≤ W (storing B at W would waste n·(W−q)·4
-    resident bytes per device; instead the gathered (batch, q) rows are
-    inf-padded to W here, which is bit-for-bit equivalent because +inf
-    lanes never win a min-plus join). Row ids ``rs``/``rt`` below
-    ``block.shape[0]`` gather from the block, the rest from B (offset
-    past the block); the dense join runs on every device, lanes whose
-    ``owner`` isn't this device are masked to +inf, and a ``pmin`` over
-    the axis assembles the answer vector."""
+    its *natural* width q ≤ W (storing B at W would waste n·(W−q) dead
+    entries of resident bytes per device; instead the gathered
+    (batch, q) rows are padded to W here with the +inf element, which is
+    bit-for-bit equivalent because +inf lanes never win a min-plus
+    join). Row ids ``rs``/``rt`` below ``block.shape[0]`` gather from
+    the block, the rest from B (offset past the block); the dense join
+    runs on every device, lanes whose ``owner`` isn't this device are
+    masked to +inf, and a ``pmin`` over the axis assembles the answer
+    vector.
+
+    With ``quant=(sentinel, scale)`` the tables hold ``core.quantize``
+    codes: padding uses the sentinel and the join runs through
+    ``join_quantized`` (the answer vector is float32 either way)."""
     dev = jax.lax.axis_index(axis)
     cross_base = block.shape[0]
     wpad = block.shape[1] - btable.shape[1]
     assert wpad >= 0, "border table wider than the combined width"
+    pad_val = jnp.inf if quant is None else block.dtype.type(quant[0])
 
     def gather(rows):
         # two gathers + a select keeps both tables device-resident (no
@@ -161,17 +245,23 @@ def join_sharded_gathered(block: jnp.ndarray, btable: jnp.ndarray,
         bord = btable[jnp.where(local, 0, rows - cross_base)]
         if wpad:
             bord = jnp.pad(bord, ((0, 0), (0, wpad)),
-                           constant_values=jnp.inf)
+                           constant_values=pad_val)
         return jnp.where(local[:, None], dist, bord)
 
-    ans = join(gather(rs), gather(rt), use_pallas=use_pallas)
+    if quant is None:
+        ans = join(gather(rs), gather(rt), use_pallas=use_pallas)
+    else:
+        ans = join_quantized(gather(rs), gather(rt), sentinel=quant[0],
+                             scale=quant[1], use_pallas=use_pallas)
     return jax.lax.pmin(jnp.where(owner == dev, ans, jnp.inf), axis)
 
 
 def join_sharded_border_gathered(block: jnp.ndarray, bshard: jnp.ndarray,
                                  owner: jnp.ndarray, rs: jnp.ndarray,
                                  rt: jnp.ndarray, *, axis: str,
-                                 use_pallas: bool = True) -> jnp.ndarray:
+                                 use_pallas: bool = True,
+                                 quant: tuple[int, float] | None = None
+                                 ) -> jnp.ndarray:
     """Fully-sharded serving join: like ``join_sharded_gathered`` but the
     border table is ROW-SHARDED over ``axis`` too — ``bshard`` is this
     device's ``ceil(n/E)`` row-slice of B at natural width q. Runs INSIDE
@@ -185,28 +275,35 @@ def join_sharded_border_gathered(block: jnp.ndarray, bshard: jnp.ndarray,
     every device holding exactly the B rows this batch needs —
     collective traffic scales with the batch, never with n, and a
     single launch amortizes the collective latency. The assembled rows
-    are inf-padded to the combined width W and joined exactly like the
-    replicated case."""
+    are padded to the combined width W with the +inf element and joined
+    exactly like the replicated case.
+
+    With ``quant=(sentinel, scale)`` the tables hold ``core.quantize``
+    codes and the ragged assembly ``pmin`` runs directly on the 2-byte
+    codes — the sentinel (the dtype maximum) is the min identity, so
+    non-owners contribute it instead of +inf and the collective moves
+    half the bytes of the float32 layout."""
     dev = jax.lax.axis_index(axis)
     cross_base = block.shape[0]
     rows_pd = bshard.shape[0]       # = ceil(n/E) ≥ 1 whenever n ≥ 1
     wpad = block.shape[1] - bshard.shape[1]
     assert wpad >= 0, "border shard wider than the combined width"
+    pad_val = jnp.inf if quant is None else block.dtype.type(quant[0])
 
     def ragged(rows):
         local = rows < cross_base
         gid = jnp.where(local, 0, rows - cross_base)
         own = (~local) & (gid // rows_pd == dev)
         vals = bshard[jnp.where(own, gid % rows_pd, 0)]
-        return jnp.where(own[:, None], vals, jnp.inf)
+        return jnp.where(own[:, None], vals, pad_val)
 
     # after the pmin every device holds the true B row for each cross
-    # lane (non-owners contributed +inf); s and t lanes are stacked so
-    # both endpoints ride one collective launch
+    # lane (non-owners contributed the min identity); s and t lanes are
+    # stacked so both endpoints ride one collective launch
     both = jax.lax.pmin(jnp.concatenate([ragged(rs), ragged(rt)]), axis)
     if wpad:
         both = jnp.pad(both, ((0, 0), (0, wpad)),
-                       constant_values=jnp.inf)
+                       constant_values=pad_val)
     bs_rows, bt_rows = jnp.split(both, 2)
 
     def gather(rows, bord):
@@ -214,8 +311,13 @@ def join_sharded_border_gathered(block: jnp.ndarray, bshard: jnp.ndarray,
         dist = block[jnp.where(local, rows, 0)]
         return jnp.where(local[:, None], dist, bord)
 
-    ans = join(gather(rs, bs_rows), gather(rt, bt_rows),
-               use_pallas=use_pallas)
+    if quant is None:
+        ans = join(gather(rs, bs_rows), gather(rt, bt_rows),
+                   use_pallas=use_pallas)
+    else:
+        ans = join_quantized(gather(rs, bs_rows), gather(rt, bt_rows),
+                             sentinel=quant[0], scale=quant[1],
+                             use_pallas=use_pallas)
     return jax.lax.pmin(jnp.where(owner == dev, ans, jnp.inf), axis)
 
 

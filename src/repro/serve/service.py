@@ -78,6 +78,7 @@ STALE = "stale"
 _EXACTNESS = (EXACT, CERTIFIED_STALE, STALE)
 
 ENGINE_PLACEMENTS = ("auto", "replicated", "sharded", "scatter_gather")
+LABEL_DTYPE_CHOICES = ("auto", "float32", "uint16", "int16")
 
 _COUNTER_KEYS = ("rule1", "rule2", "rule3", "lb_certified",
                  "lb_fallback_attempts")
@@ -105,6 +106,11 @@ class ServingPolicy:
     ``faults`` attaches a deterministic ``edge.faults.FaultPlan`` to the
     scatter-gather plane (degrade-never-error discipline; a disabled
     plan is normalized to None so it cannot perturb the clean path).
+    ``label_dtype`` picks the label-storage dtype: ``"auto"`` (defer to
+    the system attribute, then the byte-size heuristic — quantize to
+    uint16 only when the fit is lossless, so auto never changes an
+    answer), ``"float32"``, ``"uint16"``, or ``"int16"`` (explicit
+    integer dtypes are honored even when the fit is lossy).
     """
     engine: str = "auto"
     shard_border: bool | None = None
@@ -112,6 +118,7 @@ class ServingPolicy:
     rebuild: str = INSTALL_NOW
     batch: "BatchPolicy | None" = None
     faults: "FaultPlan | None" = None
+    label_dtype: str = "auto"
 
     def __post_init__(self):
         if self.engine not in ENGINE_PLACEMENTS:
@@ -120,6 +127,10 @@ class ServingPolicy:
         if self.rebuild not in REBUILD_MODES:
             raise ValueError(f"rebuild must be one of {REBUILD_MODES}, "
                              f"got {self.rebuild!r}")
+        if self.label_dtype not in LABEL_DTYPE_CHOICES:
+            raise ValueError(
+                f"label_dtype must be one of {LABEL_DTYPE_CHOICES}, "
+                f"got {self.label_dtype!r}")
         if self.faults is not None and not self.faults.enabled:
             object.__setattr__(self, "faults", None)
 
@@ -458,20 +469,24 @@ class DistanceService:
         p = self.policy
         if not p.use_kernels:
             return None
+        dtype = (self.system.label_dtype if p.label_dtype == "auto"
+                 else p.label_dtype)
         key = (self.system.center.version, p.engine, p.shard_border,
                self.system.prefer_sharded, self.system.shard_border,
-               p.faults)
+               p.faults, dtype or "auto")
         if self._plane_cache is not None and self._plane_cache[0] == key:
             return self._plane_cache[1]
         if p.engine == "scatter_gather":
-            engine = self.system._current_scatter_plane(faults=p.faults)
+            engine = self.system._current_scatter_plane(
+                faults=p.faults, label_dtype=dtype)
         else:
             prefer = {"auto": self.system.prefer_sharded,
                       "replicated": False, "sharded": True}[p.engine]
             border = (self.system.shard_border if p.shard_border is None
                       else p.shard_border)
             engine = self.system._current_engine(prefer_sharded=prefer,
-                                                 shard_border=border)
+                                                 shard_border=border,
+                                                 label_dtype=dtype)
         if engine is not None:
             self._plane_cache = (key, engine)
         return engine

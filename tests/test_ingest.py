@@ -1,0 +1,253 @@
+"""Ingest pipeline: CSR builder, DIMACS reader, synthetic continent,
+dataset registry.
+
+Everything runs offline — the only "downloads" exercised are
+``file://`` URLs into a temp cache, which is how the registry's
+trust-on-first-use pinning is validated without touching the network.
+"""
+import gzip
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dijkstra, from_edges, is_connected, load_dimacs_gr
+from repro.core.quantize import QuantSpec
+from repro.ingest import (DATASETS, CSRArrays, CSRBuilder,
+                          DimacsFormatError, dataset_path, fetch, iter_gr,
+                          load_gr_csr, load_gr_graph, sha256_of,
+                          synthetic_continent)
+
+
+# -- CSRBuilder -------------------------------------------------------------
+
+def test_builder_matches_from_edges():
+    """Same (deduped, sorted, bidirectional) adjacency as core's
+    from_edges, bit for bit."""
+    rng = np.random.default_rng(0)
+    n, m = 60, 300
+    us = rng.integers(0, n, size=m)
+    vs = rng.integers(0, n, size=m)
+    ws = rng.integers(1, 50, size=m).astype(np.float32)
+    keep = us != vs
+    g = from_edges(n, us[keep], vs[keep], ws[keep])
+    b = CSRBuilder(n)
+    b.add_arcs(us, vs, ws)                    # builder drops self-loops
+    csr = b.finalize()
+    np.testing.assert_array_equal(csr.indptr, g.indptr)
+    np.testing.assert_array_equal(csr.indices, g.indices)
+    np.testing.assert_array_equal(csr.weights, g.weights)
+    assert csr.indptr.dtype == np.int32
+    assert csr.indices.dtype == np.int32
+
+
+def test_builder_parallel_arcs_keep_min():
+    b = CSRBuilder(3)
+    b.add_arcs([0, 1, 0], [1, 0, 1], [5.0, 2.0, 9.0])
+    csr = b.finalize()
+    assert csr.num_edges == 1
+    assert csr.weights[0] == 2.0              # min over duplicates
+
+
+def test_builder_rejects_out_of_range():
+    b = CSRBuilder(4)
+    with pytest.raises(ValueError, match="outside"):
+        b.add_arcs([0], [4], [1.0])
+    with pytest.raises(ValueError, match="outside"):
+        b.add_arcs([-1], [2], [1.0])
+
+
+def test_builder_quantized_roundtrip():
+    spec = QuantSpec(scale=1.0, dtype=np.uint16, lossless=True)
+    b = CSRBuilder(4, quant=spec)
+    b.add_arcs([0, 1, 2], [1, 2, 3], [3.0, 7.0, 11.0])
+    csr = b.finalize()
+    assert csr.weights.dtype == np.uint16
+    assert csr.quant is spec
+    f = CSRBuilder(4)
+    f.add_arcs([0, 1, 2], [1, 2, 3], [3.0, 7.0, 11.0])
+    fcsr = f.finalize()
+    np.testing.assert_array_equal(csr.weights_f32(), fcsr.weights)
+    # quantized and float CSR produce the same Graph
+    np.testing.assert_array_equal(csr.to_graph().weights,
+                                  fcsr.to_graph().weights)
+    with pytest.raises(RuntimeError, match="finalize"):
+        f.finalize()
+
+
+def test_csr_nbytes_counts_quantized_payload():
+    f = CSRBuilder(4)
+    f.add_arcs([0, 1], [1, 2], [3.0, 7.0])
+    q = CSRBuilder(4, quant=QuantSpec(scale=1.0, dtype=np.uint16,
+                                      lossless=True))
+    q.add_arcs([0, 1], [1, 2], [3.0, 7.0])
+    fb, qb = f.finalize(), q.finalize()
+    assert qb.nbytes() == fb.nbytes() - 2 * fb.num_edges * 2
+
+
+# -- DIMACS reader ----------------------------------------------------------
+
+def _write_gr(tmp_path, text: str, name: str = "t.gr"):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+GOOD = """c USA-road-d style file
+p sp 4 5
+a 1 2 3
+c interleaved comment
+a 2 1 3
+a 2 3 7
+a 3 4 2
+a 4 3 2
+"""
+
+
+def test_iter_gr_streams_arcs(tmp_path):
+    path = _write_gr(tmp_path, GOOD)
+    arcs = 0
+    for n, us, vs, ws in iter_gr(path, chunk_arcs=2):
+        assert n == 4
+        assert us.min() >= 0 and us.max() < 4      # 0-based out
+        arcs += len(us)
+    assert arcs == 5
+
+
+def test_load_gr_csr_and_graph(tmp_path):
+    path = _write_gr(tmp_path, GOOD)
+    csr = load_gr_csr(path)
+    assert isinstance(csr, CSRArrays)
+    assert csr.num_vertices == 4
+    assert csr.num_edges == 3                  # 5 arcs, deduped undirected
+    g = load_gr_graph(path)
+    assert dijkstra(g, 0)[3] == 12.0           # 3 + 7 + 2
+
+
+def test_load_dimacs_gr_delegates(tmp_path):
+    """core.graph.load_dimacs_gr is rebased on the streaming reader."""
+    path = _write_gr(tmp_path, GOOD)
+    g = load_dimacs_gr(path)
+    g2 = load_gr_graph(path)
+    np.testing.assert_array_equal(g.indptr, g2.indptr)
+    np.testing.assert_array_equal(g.weights, g2.weights)
+
+
+def test_iter_gr_reads_gzip(tmp_path):
+    p = tmp_path / "t.gr.gz"
+    with gzip.open(p, "wt") as f:
+        f.write(GOOD)
+    g = load_gr_graph(str(p))
+    assert g.num_vertices == 4
+
+
+def test_gr_errors(tmp_path):
+    with pytest.raises(DimacsFormatError, match="before"):
+        load_gr_graph(_write_gr(tmp_path, "a 1 2 3\n"))
+    with pytest.raises(DimacsFormatError, match="1-based"):
+        load_gr_graph(_write_gr(tmp_path, "p sp 2 1\na 0 1 3\n"))
+    with pytest.raises(DimacsFormatError, match="range"):
+        load_gr_graph(_write_gr(tmp_path, "p sp 2 1\na 1 5 3\n"))
+    with pytest.raises(DimacsFormatError, match="line 3"):
+        load_gr_graph(_write_gr(tmp_path, "p sp 2 1\na 1 2 3\np sp 9 9\n"))
+    # repeated but consistent p lines are tolerated
+    g = load_gr_graph(_write_gr(tmp_path,
+                                "p sp 2 2\na 1 2 3\np sp 2 2\na 2 1 3\n"))
+    assert g.num_vertices == 2
+
+
+# -- synthetic continent ----------------------------------------------------
+
+def test_synth_deterministic_and_connected():
+    a1, p1 = synthetic_continent(grid=(2, 3), district=(5, 4), seed=9)
+    a2, p2 = synthetic_continent(grid=(2, 3), district=(5, 4), seed=9)
+    np.testing.assert_array_equal(a1.indices, a2.indices)
+    np.testing.assert_array_equal(a1.weights, a2.weights)
+    np.testing.assert_array_equal(p1.assignment, p2.assignment)
+    a3, _ = synthetic_continent(grid=(2, 3), district=(5, 4), seed=10)
+    assert not np.array_equal(a1.weights, a3.weights)
+    g = a1.to_graph()
+    assert g.num_vertices == 2 * 3 * 5 * 4
+    assert is_connected(g)
+    assert p1.num_districts == 6
+    # districts are the grid mosaic: equal sizes
+    sizes = np.bincount(p1.assignment, minlength=6)
+    assert (sizes == 20).all()
+
+
+def test_synth_integral_weights_quantize_losslessly():
+    csr, _ = synthetic_continent(grid=(2, 2), district=(4, 4), seed=1,
+                                 weight_high=15)
+    w = csr.weights_f32()
+    assert (w == np.rint(w)).all() and w.min() >= 1 and w.max() <= 15
+    assert QuantSpec.fit(w).lossless
+
+
+def test_synth_cross_district_edges_are_sparse():
+    csr, part = synthetic_continent(grid=(2, 2), district=(6, 6),
+                                    border_links=2, seed=3)
+    g = csr.to_graph()
+    src = np.repeat(np.arange(g.num_vertices), np.diff(g.indptr))
+    cross = part.assignment[src] != part.assignment[g.indices]
+    # 4 boundary segments x border_links crossings x 2 directions
+    assert cross.sum() == 2 * 2 * (2 * 1 + 1 * 2)
+
+
+def test_synth_validation():
+    with pytest.raises(ValueError):
+        synthetic_continent(grid=(0, 2), district=(4, 4))
+    with pytest.raises(ValueError):
+        synthetic_continent(grid=(2, 2), district=(1, 4))
+
+
+# -- dataset registry -------------------------------------------------------
+
+def test_registry_counts_and_paths(monkeypatch, tmp_path):
+    assert "USA-road-d.NY" in DATASETS
+    spec = DATASETS["USA-road-d.NY"]
+    assert spec.num_vertices == 264_346
+    assert spec.filename.endswith(".gr.gz")
+    monkeypatch.setenv("REPRO_DATA_DIR", str(tmp_path))
+    p = dataset_path("USA-road-d.NY")          # no I/O
+    assert str(p).startswith(str(tmp_path))
+    assert not p.exists()
+
+
+def test_fetch_tofu_pins_and_verifies(monkeypatch, tmp_path):
+    """file:// fetch: first download pins a .sha256 sidecar; a tampered
+    re-fetch raises instead of silently accepting new bytes."""
+    import repro.ingest.datasets as ds
+    src = tmp_path / "upstream.gr.gz"
+    with gzip.open(src, "wt") as f:
+        f.write(GOOD)
+    spec = ds.DatasetSpec("tiny", f"file://{src}", 4, 5)
+    monkeypatch.setitem(ds.DATASETS, "tiny", spec)
+    monkeypatch.setenv("REPRO_DATA_DIR", str(tmp_path / "cache"))
+
+    dest = fetch("tiny")
+    assert dest.exists()
+    side = dest.with_suffix(dest.suffix + ".sha256")
+    assert side.read_text().strip() == sha256_of(dest)
+    fetch("tiny")                              # cache hit re-verifies
+
+    with gzip.open(src, "wt") as f:            # upstream changes
+        f.write(GOOD + "c tampered\n")
+    with pytest.raises(ValueError, match="sha256"):
+        fetch("tiny", force=True)
+    # the poisoned download never replaced the pinned cache file
+    assert sha256_of(dest) == side.read_text().strip()
+    g = load_gr_graph(str(dest))
+    assert g.num_vertices == 4
+
+
+def test_fetch_detects_corrupted_cache(monkeypatch, tmp_path):
+    import repro.ingest.datasets as ds
+    src = tmp_path / "u.gr"
+    src.write_text(GOOD)
+    spec = ds.DatasetSpec("tiny2", f"file://{src}", 4, 5)
+    monkeypatch.setitem(ds.DATASETS, "tiny2", spec)
+    monkeypatch.setenv("REPRO_DATA_DIR", str(tmp_path / "cache"))
+    dest = fetch("tiny2")
+    dest.write_text("garbage")                 # bit-rot in the cache
+    with pytest.raises(ValueError, match="sha256"):
+        fetch("tiny2")
