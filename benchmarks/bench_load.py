@@ -195,6 +195,39 @@ def run(quick: bool = False) -> None:
         "storm with center down degraded nothing — the fault-aware "
         "network model is not engaging")
 
+    # 6. open vs closed loop at the same target load: the closed fleet
+    # waits for each answer, so under overload it self-throttles —
+    # offered load collapses to capacity and the p99 stays flat, hiding
+    # the queue the open-loop run exposes (the closed-loop fallacy the
+    # harness exists to avoid; both runs use the same deterministic
+    # service model so the comparison is noise-free)
+    override = (5.0, 0.5)           # deliberately slow: overload regime
+    clients, qps = 2_000, 1.0
+    open_rep = OpenLoopLoadGen(
+        system.service(ServingPolicy(rebuild=STALE_OK)),
+        batch_size=64, window_ms=WINDOW_MS,
+        service_ms_override=override, seed=4,
+    ).run(clients, qps, horizon, max_arrivals=3_000)
+    closed_rep = OpenLoopLoadGen(
+        system.service(ServingPolicy(rebuild=STALE_OK)),
+        batch_size=64, window_ms=WINDOW_MS,
+        service_ms_override=override, closed_loop=32, seed=4,
+    ).run(clients, qps, horizon)
+    _report("loop-open", open_rep)
+    _report("loop-closed", closed_rep, extra=";closed_loop=32")
+    emit("load/loop-p99-ratio", open_rep.p99_ms / max(1e-9,
+                                                      closed_rep.p99_ms),
+         unit="info",
+         derived=f"open_p99={open_rep.p99_ms:.1f}ms"
+                 f";closed_p99={closed_rep.p99_ms:.1f}ms"
+                 f";open_offered={open_rep.offered:,}"
+                 f";closed_offered={closed_rep.offered:,}")
+    assert closed_rep.offered < open_rep.offered, (
+        "closed loop did not self-throttle below the open-loop stream")
+    assert open_rep.p99_ms > closed_rep.p99_ms, (
+        "open loop shows no queue the closed loop hides — the "
+        "comparison mode is not measuring what it claims")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)

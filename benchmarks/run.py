@@ -44,7 +44,7 @@ def main() -> None:
     from . import (bench_edge, bench_indexing, bench_ingest,
                    bench_kernels, bench_lm, bench_load,
                    bench_oracle_sharding, bench_query, bench_scatter,
-                   bench_update)
+                   bench_topology, bench_update)
     suites = {
         "indexing": bench_indexing.run,   # Table 2
         "query": bench_query.run,         # Fig. 5
@@ -53,6 +53,7 @@ def main() -> None:
         "lm": bench_lm.run,
         "oracle_sharding": bench_oracle_sharding.run,  # §Perf (paper side)
         "update": bench_update.run,       # incremental repair sweep
+        "topology": bench_topology.run,   # closures + migration (repro.topo)
         "load": bench_load.run,           # open-loop million-user harness
         "scatter": bench_scatter.run,     # cross-edge scatter-gather plane
         "ingest": bench_ingest.run,       # continent-scale ingest + quantize

@@ -9,10 +9,10 @@ from .engine import BatchedQueryEngine, ShardedBatchedEngine
 from .scatter_gather import ScatterGatherPlane
 from .faults import (NO_FAULTS, FaultInjector, FaultPlan,
                      district_outage_storm, link_loss_sweep)
-from .simulator import (BatchPolicy, QueryEvent, SimResult, UpdateSchedule,
-                        VariableUpdateSchedule, make_trace,
-                        run_update_epochs, simulate_centralized,
-                        simulate_edge)
+from .simulator import (BatchPolicy, MigrationEvent, QueryEvent, SimResult,
+                        UpdateSchedule, VariableUpdateSchedule, make_trace,
+                        migrations_from_plan, run_update_epochs,
+                        simulate_centralized, simulate_edge)
 from .traffic import (TRAFFIC_SHAPES, arrival_times, poisson_count,
                       rate_profile)
 from .sharded_oracle import (ShardedOracleData, default_edge_mesh,

@@ -112,6 +112,48 @@ class ComputingCenter:
                 "stale_districts": stale, "changed_rows": changed,
                 "noop": False}
 
+    def apply_structural(self, g_new: Graph) -> dict:
+        """Structural rebuild for a topology change (closures/openings):
+        classify via ``repro.topo``, repair the index with the scoped
+        structural path, bump the version, and invalidate only the
+        shortcut matrices whose inputs moved.  Same report shape as
+        ``apply_delta`` plus ``"border_changed"``.
+
+        Border lists are topology-derived, so unlike the weight path
+        they are re-derived whenever the border sets moved (and the
+        whole shortcut cache dropped with them — stale border lists
+        would index B with the wrong rows)."""
+        from ..topo.structural import classify_structural
+        delta = classify_structural(self.graph, self.partition, g_new)
+        if delta.is_empty and self.border_labels is not None:
+            self.graph = g_new      # fresh CSR identity, same topology
+            return {"seconds": 0.0, "incremental": True, "delta": delta,
+                    "stale_districts": [], "noop": True,
+                    "border_changed": False,
+                    "changed_rows": np.zeros(self.graph.num_vertices,
+                                             dtype=bool)}
+        t0 = time.perf_counter()
+        labels, rep = self._incremental_builder().apply_structural(
+            g_new, self.partition, delta)
+        self.last_build_seconds = time.perf_counter() - t0
+        self.graph = g_new
+        self.border_labels = labels
+        self.version += 1
+        changed = rep["changed_rows"]
+        if delta.border_changed or rep.get("border_changed"):
+            self._border_lists = None
+            self._shortcut_cache.clear()
+            stale = list(range(self.partition.num_districts))
+        else:
+            stale = [i for i, b in enumerate(self._borders())
+                     if len(b) and changed[b].any()]
+            for i in stale:
+                self._shortcut_cache.pop(i, None)
+        return {"seconds": self.last_build_seconds,
+                "incremental": rep["incremental"], "delta": delta,
+                "stale_districts": stale, "changed_rows": changed,
+                "border_changed": delta.border_changed, "noop": False}
+
     def _borders(self) -> list[np.ndarray]:
         if self._border_lists is None:
             self._border_lists = borders_of(self.graph, self.partition)

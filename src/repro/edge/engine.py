@@ -163,7 +163,8 @@ class ShardedBatchedEngine:
                  assignment: np.ndarray, mesh: Mesh | None = None,
                  axis: str = "edge", use_pallas: bool | None = None,
                  shard_border: bool = False,
-                 quant: QuantSpec | None = None):
+                 quant: QuantSpec | None = None,
+                 placement: np.ndarray | None = None):
         if mesh is None:
             mesh = default_edge_mesh(axis=axis)
         self.mesh = mesh
@@ -171,9 +172,15 @@ class ShardedBatchedEngine:
         self.num_devices = mesh.shape[axis]
         self.shard_border = shard_border
         self.quant = quant
+        # placement = explicit district → device table (the online
+        # repartitioner's routing table); None = blocked default.  The
+        # pack pass memcpys each district's CACHED dense table into its
+        # slot, so a migration re-densifies nothing — only the moved
+        # districts change coordinates.
         self.data = pack_tables(btable, locals_, assignment,
                                 self.num_devices,
-                                shard_border=shard_border, quant=quant)
+                                shard_border=shard_border, quant=quant,
+                                placement=placement)
         if use_pallas is None:
             use_pallas = jax.default_backend() != "cpu"
         self.use_pallas = use_pallas

@@ -76,6 +76,12 @@ class EdgeSystem:
     # "float32" / "uint16" / "int16" force the storage (an explicit
     # integer dtype is honored even when the fit is lossy)
     label_dtype: str | None = None
+    # district → edge-host routing table (repro.topo.rebalance); None =
+    # the blocked default layout.  ``migrate`` swaps it atomically — its
+    # version joins every engine/plane cache key, so the next batch
+    # routes on the new table while in-flight batches keep the snapshot
+    # (= the old owner) they started with
+    placement: object | None = None
     # steady-state serving engine, snapshot of one index version
     _engine: object | None = field(default=None, repr=False)
     _engine_key: tuple | None = field(default=None, repr=False)
@@ -159,6 +165,99 @@ class EdgeSystem:
                 "stale_shortcut_districts": sorted(stale),
                 "clean_districts": clean}
 
+    def apply_topology_update(self, g_new: Graph,
+                              incremental: bool = True) -> dict:
+        """Structural update cycle — road closures/openings.
+
+        ``incremental=True`` (default): classify the topology diff
+        (``repro.topo``), repair B with the scoped structural path, and
+        refresh only the edge servers whose inputs moved — a district's
+        local index reads its intra arc set (dirty districts refresh)
+        and its Definition-4 border list (every server refreshes when
+        ``border_changed``).  ``incremental=False`` runs the paper's
+        full redeploy cycle.  Either way the partition and vertex set
+        are fixed; repartitioning is a separate concern (``migrate``).
+        """
+        if not incremental:
+            self.graph = g_new
+            self.center.graph = g_new
+            self.center._border_lists = None       # topology moved
+            local_s = [srv.refresh_local(g_new, self.partition)
+                       for srv in self.servers]
+            bl_s = self.center.rebuild()
+            shortcut_s = [srv.install_shortcuts(
+                g_new, self.partition,
+                self.center.shortcuts_for(srv.district_id),
+                self.center.version) for srv in self.servers]
+            return {"local_refresh_s": local_s, "bl_rebuild_s": bl_s,
+                    "shortcut_install_s": shortcut_s,
+                    "incremental": False, "border_changed": True}
+        rep = self.center.apply_structural(g_new)
+        self.graph = self.center.graph
+        if rep["noop"]:
+            return {"local_refresh_s": {}, "bl_rebuild_s": 0.0,
+                    "shortcut_install_s": {}, "incremental": True,
+                    "border_changed": False,
+                    "dirty_districts": [], "stale_shortcut_districts": [],
+                    "clean_districts": list(range(len(self.servers)))}
+        delta = rep["delta"]
+        if rep["border_changed"]:
+            # border sets moved: every server's L_i border rows are laid
+            # out against the new border lists — refresh everywhere
+            dirty = set(range(len(self.servers)))
+        else:
+            dirty = set(int(i) for i in delta.dirty_districts)
+        stale = set(rep["stale_districts"])
+        local_s: dict[int, float] = {}
+        shortcut_s: dict[int, float] = {}
+        clean: list[int] = []
+        for i, srv in enumerate(self.servers):
+            if i in dirty:
+                local_s[i] = srv.refresh_local(g_new, self.partition)
+            if i in dirty or i in stale or srv.augmented is None:
+                shortcut_s[i] = srv.install_shortcuts(
+                    g_new, self.partition, self.center.shortcuts_for(i),
+                    self.center.version)
+            else:
+                srv.augmented_version = self.center.version
+                clean.append(i)
+        return {"local_refresh_s": local_s,
+                "bl_rebuild_s": rep["seconds"],
+                "shortcut_install_s": shortcut_s,
+                "incremental": rep["incremental"],
+                "border_changed": rep["border_changed"],
+                "dirty_districts": sorted(dirty),
+                "stale_shortcut_districts": sorted(stale),
+                "clean_districts": clean}
+
+    def migrate(self, plan_or_placement) -> dict:
+        """Install a new district → host placement atomically (the
+        ``RebalancePlanner`` execute step).
+
+        The placement version joins every engine/plane cache key, so
+        the swap is a pointer write: batches planned after this call
+        route on the new table (the next ``_current_engine`` call
+        re-packs the moved districts' blocks — unmoved districts'
+        cached dense tables are memcpy'd, not recomputed); batches
+        already in flight keep the engine snapshot — and therefore the
+        old owner — they started with.  Index versions are untouched,
+        so exactness is preserved through the swap."""
+        plan = plan_or_placement
+        placement = getattr(plan, "placement", plan)
+        m = self.partition.num_districts
+        if placement.num_districts != m:
+            raise ValueError(f"placement covers {placement.num_districts} "
+                             f"districts, system has {m}")
+        old = self.placement
+        self.placement = placement
+        return {"placement_version": placement.version,
+                "num_hosts": placement.num_hosts,
+                "moved_districts":
+                    [] if old is None and plan is placement
+                    else [mv.district for mv in getattr(plan, "moves", ())],
+                "previous_version":
+                    None if old is None else old.version}
+
     def service(self, policy: "ServingPolicy | None" = None
                 ) -> "DistanceService":
         """A typed request-plane front door over this system (see
@@ -226,10 +325,19 @@ class EdgeSystem:
         shard_border = sharded and (
             btable.size * 4 > SHARD_BORDER_AUTO_BYTES
             if shard_border is None else shard_border)
+        # the placement maps districts to edge hosts; it becomes the
+        # device layout when the host and device counts line up (the
+        # simulator's one-host-per-device model), and joins the key
+        # either way so a migration always swaps the snapshot
+        placement = self.placement
+        pkey = None if placement is None else placement.key()
+        host_of = placement.host_of \
+            if placement is not None \
+            and placement.num_hosts == num_devices else None
         key = (self.center.version,
                tuple(srv.augmented_version for srv in self.servers),
                sharded, shard_border, num_devices,
-               label_dtype or "auto")
+               label_dtype or "auto", pkey)
         if self._engine is None or self._engine_key != key:
             from .engine import BatchedQueryEngine, ShardedBatchedEngine
             quant = self._resolve_quant(label_dtype)
@@ -243,7 +351,7 @@ class EdgeSystem:
                 self._engine = ShardedBatchedEngine(
                     btable, [srv.augmented for srv in self.servers],
                     self.partition.assignment, shard_border=shard_border,
-                    quant=quant)
+                    quant=quant, placement=host_of)
             else:
                 self._engine = BatchedQueryEngine(
                     btable, [srv.augmented for srv in self.servers],
@@ -277,9 +385,10 @@ class EdgeSystem:
             return None
         if faults is not None and not faults.enabled:
             faults = None
+        pkey = None if self.placement is None else self.placement.key()
         key = (self.center.version,
                tuple(srv.augmented_version for srv in self.servers),
-               faults, label_dtype or "auto")
+               faults, label_dtype or "auto", pkey)
         if self._scatter is None or self._scatter_key != key:
             from .scatter_gather import ScatterGatherPlane
             quant = self._resolve_quant(label_dtype)

@@ -85,7 +85,13 @@ class ScatterGatherPlane:
     _held: list[set] = field(repr=False)
     exchange_stats: dict = field(default_factory=lambda: {
         "exchanges": 0, "rows_exchanged": 0, "retries": 0,
-        "failed_exchanges": 0, "charged_ms": 0.0})
+        "failed_exchanges": 0, "charged_ms": 0.0, "co_hosted_rows": 0})
+    # district → edge-host routing table (repro.topo.EdgePlacement, set
+    # by the router from EdgeSystem.placement).  Districts sharing a
+    # host exchange border rows over loopback: the copy still happens,
+    # but it is counted as co_hosted_rows instead of a peer-link
+    # exchange and (in the faulted path) no link fault can apply.
+    placement: object | None = field(default=None, repr=False)
     # fault-injection runtime (edge/faults.FaultInjector) — None on the
     # clean fast path, which then stays bit-for-bit with the engines
     faults: object | None = field(default=None, repr=False)
@@ -130,6 +136,7 @@ class ScatterGatherPlane:
                           system.partition.assignment, system.servers,
                           version, use_pallas=use_pallas, quant=quant)
         plane.center = center
+        plane.placement = system.placement
         if faults is not None and getattr(faults, "enabled", False):
             from .faults import FaultInjector
             plane.faults = FaultInjector(faults)
@@ -176,9 +183,15 @@ class ScatterGatherPlane:
             rows = self.quant.quantize(rows)
         self._bview(d)[verts] = rows
 
+    def _co_hosted(self, d: int, j: int) -> bool:
+        p = self.placement
+        return p is not None and bool(p.host_of[d] == p.host_of[j])
+
     def _ensure_rows(self, d: int, districts: np.ndarray) -> None:
         """Make sure server ``d`` holds the B rows of every district in
-        ``districts``, running peer exchanges for the ones it lacks."""
+        ``districts``, running peer exchanges for the ones it lacks.
+        Co-hosted peers (same edge host under the current placement)
+        copy over loopback — counted, but not as a peer-link exchange."""
         srv = self.servers[d]
         held = self._held[d]
         for j in np.unique(districts):
@@ -188,8 +201,11 @@ class ScatterGatherPlane:
             if j != d:
                 moved = srv.exchange_border_rows(self.servers[j])
                 if moved:
-                    self.exchange_stats["exchanges"] += 1
-                    self.exchange_stats["rows_exchanged"] += moved
+                    if self._co_hosted(d, j):
+                        self.exchange_stats["co_hosted_rows"] += moved
+                    else:
+                        self.exchange_stats["exchanges"] += 1
+                        self.exchange_stats["rows_exchanged"] += moved
             verts, rows = srv.border_rows_of(j)
             self._install_rows(d, verts, rows)
             held.add(j)
@@ -282,6 +298,16 @@ class ScatterGatherPlane:
             stale_held.discard(j)
             return "ok"
         inj = self.faults
+        if self._co_hosted(d, j) and not inj.server_down(j):
+            # same edge host: the copy is loopback, no peer link to fault
+            moved = srv.exchange_border_rows(self.servers[j])
+            if moved:
+                self.exchange_stats["co_hosted_rows"] += moved
+            verts, rows = srv.border_rows_of(j)
+            self._install_rows(d, verts, rows)
+            held.add(j)
+            stale_held.discard(j)
+            return "ok"
         if inj.server_down(j):
             fault = "outage"
         else:

@@ -98,6 +98,13 @@ class ShardedOracleData:
     # set ⇒ tables hold quantized integer codes (core.quantize); the
     # device joins are handed quant.key() and answers stay float32
     quant: QuantSpec | None = None
+    # district → (device, in-device slot) routing table.  None = the
+    # blocked default (district i on device i // dpd at slot i % dpd);
+    # a migration-produced placement packs each device's resident
+    # districts into slots 0..count-1 instead.  Routing-only state: it
+    # survives release_host_tables.
+    device_of: np.ndarray | None = None    # (m,) int64
+    slot_of: np.ndarray | None = None      # (m,) int64
 
     def __post_init__(self):
         self.districts_per_device = (self.district_table.shape[0]
@@ -109,6 +116,10 @@ class ShardedOracleData:
             if self.border_sharded else self.btable.shape[0])
         self.num_vertices = len(self.local_pos)
         self.itemsize = int(self.district_table.dtype.itemsize)
+        if self.device_of is None:
+            ids = np.arange(self.num_districts, dtype=np.int64)
+            self.device_of = ids // self.districts_per_device
+            self.slot_of = ids % self.districts_per_device
 
     @property
     def cross_base(self) -> int:
@@ -147,7 +158,8 @@ def pack_tables(btable: np.ndarray, locals_: list[LocalIndex],
                 assignment: np.ndarray, num_devices: int, *,
                 combined: bool = False,
                 shard_border: bool = False,
-                quant: QuantSpec | None = None) -> ShardedOracleData:
+                quant: QuantSpec | None = None,
+                placement: np.ndarray | None = None) -> ShardedOracleData:
     """Blocked packing of the combined hub-aligned table: districts padded
     to ``m_pad = dpd·E`` so the leading axis shards evenly, every district
     table densified to (kmax, W) with the same inf padding the replicated
@@ -167,12 +179,38 @@ def pack_tables(btable: np.ndarray, locals_: list[LocalIndex],
     ``quant`` switches the storage dtype: tables hold ``core.quantize``
     codes (2 bytes/entry) and every padding element is the dtype's
     sentinel — the quantized image of +inf, so padding lanes still
-    never win the join."""
+    never win the join.
+
+    ``placement`` is an explicit district → device table (the
+    repartitioner's ``EdgePlacement.host_of`` with one host per device);
+    each device's resident districts are packed into its slots
+    ``0..count-1`` and the block height becomes the *maximum* per-device
+    district count.  ``None`` keeps the blocked default — bitwise
+    identical to the same call before placements existed."""
     assert not (combined and shard_border), \
         "combined packing keeps B inside the single replicated buffer"
     n = len(assignment)
     m = len(locals_)
-    dpd = -(-m // num_devices)
+    if placement is None:
+        dpd = -(-m // num_devices)
+        device_of = slot_of = None          # blocked default, derived
+        ids = np.arange(m, dtype=np.int64)
+        base_dev, base_slot = ids // dpd, ids % dpd
+    else:
+        device_of = np.asarray(placement, dtype=np.int64)
+        if device_of.shape != (m,):
+            raise ValueError(f"placement must map all {m} districts")
+        if len(device_of) and (device_of.min() < 0
+                               or device_of.max() >= num_devices):
+            raise ValueError("placement host ids must lie in "
+                             f"[0, {num_devices})")
+        counts = np.bincount(device_of, minlength=num_devices)
+        dpd = max(1, int(counts.max()))
+        slot_of = np.zeros(m, dtype=np.int64)
+        for dev in range(num_devices):
+            resident = np.nonzero(device_of == dev)[0]
+            slot_of[resident] = np.arange(len(resident))
+        base_dev, base_slot = device_of, slot_of
     m_pad = dpd * num_devices
     kmax = max(len(li.vertices) for li in locals_)
     q = btable.shape[1]
@@ -205,12 +243,14 @@ def pack_tables(btable: np.ndarray, locals_: list[LocalIndex],
     local_pos = np.zeros(n, dtype=np.int64)
     for i, li in enumerate(locals_):
         k = len(li.vertices)
-        table[i * kmax:i * kmax + k, :k] = enc(li.dense_table())
+        base = (base_dev[i] * dpd + base_slot[i]) * kmax
+        table[base:base + k, :k] = enc(li.dense_table())
         local_pos[li.vertices] = np.arange(k, dtype=np.int64)
     return ShardedOracleData(table, bt, local_pos,
                              assignment.astype(np.int64), kmax,
                              num_devices, m, combined_table=buf,
-                             border_sharded=shard_border, quant=quant)
+                             border_sharded=shard_border, quant=quant,
+                             device_of=device_of, slot_of=slot_of)
 
 
 def pack_for_mesh(part: Partition, bl: BorderLabels,
@@ -232,11 +272,13 @@ def prepare_queries(data: ShardedOracleData, ss: np.ndarray,
     ts = np.asarray(ts, dtype=np.int64)
     ds = data.assignment[ss]
     cross = ds != data.assignment[ts]
-    dpd = data.districts_per_device
-    slot_base = (ds % dpd) * data.kmax
+    # routing reads the packed placement table (blocked default:
+    # device i // dpd, slot i % dpd — identical coordinates to the
+    # historical arithmetic)
+    slot_base = data.slot_of[ds] * data.kmax
     rs = np.where(cross, data.cross_base + ss, slot_base + data.local_pos[ss])
     rt = np.where(cross, data.cross_base + ts, slot_base + data.local_pos[ts])
-    return {"owner": ds // dpd, "rs": rs, "rt": rt}
+    return {"owner": data.device_of[ds], "rs": rs, "rt": rt}
 
 
 _FN_CACHE: dict = {}

@@ -41,6 +41,60 @@ class QueryEvent:
     t: int
 
 
+@dataclass(frozen=True)
+class MigrationEvent:
+    """One district migration on the simulated clock: the routing swap
+    lands at ``t_ms`` (queries at t >= t_ms route to ``dst_host``); the
+    table copy occupies the declared window [t_ms - copy_ms, t_ms).
+    Inside the window the ``ServingPolicy.migration`` discipline
+    applies: ``"dual"`` keeps the source host serving exactly (the
+    engine-swap semantics of ``EdgeSystem.migrate`` — snapshots are
+    content-addressed by index version, so nothing goes stale) and
+    ``"handoff"`` flags window queries stale."""
+    t_ms: float
+    district: int
+    src_host: int
+    dst_host: int
+    copy_ms: float = 0.0
+
+
+def migrations_from_plan(plan, t_ms: float,
+                         copy_ms: float = 0.0) -> list[MigrationEvent]:
+    """Lift a ``repro.topo.MigrationPlan`` onto the simulated clock:
+    every move swaps at ``t_ms`` with the same declared copy window."""
+    return [MigrationEvent(float(t_ms), m.district, m.src_host, m.dst_host,
+                           float(copy_ms)) for m in plan.moves]
+
+
+class _PlacementTimeline:
+    """Time-varying district → edge-host routing: the base placement
+    plus a migration schedule.  ``host_at`` is the routing table a
+    client stub sees at time t; ``in_copy_window`` tests the declared
+    migration window."""
+
+    def __init__(self, placement, migrations=()):
+        host_of = getattr(placement, "host_of", placement)
+        self.base = np.asarray(host_of, dtype=np.int32)
+        hosts = int(self.base.max()) + 1 if len(self.base) else 1
+        self.num_hosts = int(getattr(placement, "num_hosts", hosts))
+        self._moves: dict[int, list[MigrationEvent]] = {}
+        for mv in (migrations or ()):
+            self._moves.setdefault(int(mv.district), []).append(mv)
+        for lst in self._moves.values():
+            lst.sort(key=lambda m: m.t_ms)
+
+    def host_at(self, d: int, t_ms: float) -> int:
+        host = int(self.base[d])
+        for mv in self._moves.get(int(d), ()):
+            if t_ms >= mv.t_ms:
+                host = int(mv.dst_host)
+        return host
+
+    def in_copy_window(self, d: int, t_ms: float) -> bool:
+        return any(mv.t_ms - mv.copy_ms <= t_ms < mv.t_ms
+                   for mv in self._moves.get(int(d), ()))
+
+
 @dataclass
 class SimResult:
     latencies_ms: np.ndarray
@@ -52,6 +106,12 @@ class SimResult:
     waited_frac: float = 0.0
     stale_frac: float = 0.0     # served stale under the stale_ok policy
     degraded_frac: float = 0.0  # flagged non-exact under injected faults
+    # migration accounting (None / 0 unless a placement was simulated):
+    # per-query masks for the exactness-outside-the-window assertion
+    migration_stale_frac: float = 0.0   # flagged stale under "handoff"
+    migration_window_mask: np.ndarray | None = field(default=None,
+                                                     repr=False)
+    nonexact_mask: np.ndarray | None = field(default=None, repr=False)
 
     @classmethod
     def from_latencies(cls, lat: np.ndarray, lb_frac=0.0, waited=0.0,
@@ -72,7 +132,8 @@ class SimResult:
                 "lb_certified": round(self.lb_certified_frac, 3),
                 "waited": round(self.waited_frac, 3),
                 "stale": round(self.stale_frac, 3),
-                "degraded": round(self.degraded_frac, 3)}
+                "degraded": round(self.degraded_frac, 3),
+                "migration_stale": round(self.migration_stale_frac, 3)}
 
 
 def make_trace(g: Graph, num_queries: int, horizon_ms: float,
@@ -333,7 +394,8 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                   certified_fn, num_districts: int,
                   batch: BatchPolicy | None = None,
                   policy: "ServingPolicy | None" = None,
-                  faults=None) -> SimResult:
+                  faults=None, placement=None,
+                  migrations=None) -> SimResult:
     """``certified_fn(s, t) -> bool`` — whether Theorem 3 certifies the
     local answer for a same-district pair (precomputed by the caller from
     the actual indexes, so the simulation uses real certification rates;
@@ -363,25 +425,62 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
     survivor, dead peer links are charged the retry/backoff budget then
     forwarded through the center, and lanes that can only be served
     stale/unavailable are counted in ``SimResult.degraded_frac``.
+
+    ``placement`` (a ``repro.topo.EdgePlacement`` or a host_of array)
+    consolidates the per-district queues onto shared edge *hosts* — the
+    deployment shape the online repartitioner manages.  ``migrations``
+    (a list of ``MigrationEvent``) moves districts between hosts on the
+    simulated clock; ``policy.migration`` picks the copy-window
+    discipline (``"dual"`` = source serves exactly until the swap,
+    ``"handoff"`` = window queries flagged stale).  With a placement
+    simulated, ``SimResult.migration_window_mask`` /
+    ``SimResult.nonexact_mask`` expose per-query flags so exactness
+    outside the declared window can be asserted.
     """
     stale_ok = policy is not None and policy.rebuild == "stale_ok"
     scatter = policy is not None and policy.engine == "scatter_gather"
+    handoff = (policy is not None
+               and getattr(policy, "migration", "dual") == "handoff")
     inj = _resolve_injector(faults, policy)
+    if migrations and placement is None:
+        raise ValueError("migrations require an explicit placement")
+    tl = (_PlacementTimeline(placement, migrations)
+          if placement is not None else None)
     if batch is None and policy is not None:
         batch = policy.batch
     if batch is not None:
         return _simulate_edge_batched(trace, topo, schedule, assignment,
                                       certified_fn, num_districts, batch,
                                       stale_ok=stale_ok, scatter=scatter,
-                                      inj=inj)
+                                      inj=inj, tl=tl, handoff=handoff)
     edge_servers = [_Server(topo.latency.edge_service_ms)
-                    for _ in range(num_districts)]
+                    for _ in range(tl.num_hosts if tl is not None
+                                   else num_districts)]
     center = _Server(topo.latency.center_service_ms)
     lat = np.empty(len(trace), dtype=np.float64)
     certified_n = 0
     waited = 0
     stale_n = 0
     degraded_n = 0
+    if tl is not None:
+        hidx = tl.host_at
+        win_mask = np.zeros(len(trace), dtype=bool)
+        mig_stale = np.zeros(len(trace), dtype=bool)
+        nonexact = np.zeros(len(trace), dtype=bool)
+    else:
+        def hidx(d, t_ms):
+            return d
+        win_mask = mig_stale = nonexact = None
+
+    def _mark(i, d, t_ms):
+        # the query read district d's table on an edge host: flag the
+        # declared copy window (and, under handoff, the staleness)
+        if tl is not None and tl.in_copy_window(d, t_ms):
+            win_mask[i] = True
+            if handoff:
+                mig_stale[i] = True
+                nonexact[i] = True
+
     lm = topo.latency
     for i, ev in enumerate(trace):
         if inj is not None:
@@ -395,6 +494,8 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                 # upper bound — served over the WAN, flagged degraded;
                 # with the center dark too, a flat flagged failure
                 degraded_n += 1
+                if nonexact is not None:
+                    nonexact[i] = True
                 if not inj.center_down():
                     a = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
                     done = center.serve(a)
@@ -404,23 +505,30 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                     lat[i] = 2 * lm.client_edge_ms
                 continue
             if arrive >= global_ready:          # L_i⁺ fresh: exact at edge
-                done = edge_servers[ds].serve(arrive)
+                _mark(i, ds, ev.t_ms)
+                done = edge_servers[hidx(ds, ev.t_ms)].serve(arrive)
                 lat[i] = done + lm.client_edge_ms - ev.t_ms
                 continue
             # rebuild window: LB certificate on the fresh plain L_i
             if arrive >= local_ready and certified_fn(ev.s, ev.t):
                 certified_n += 1
-                done = edge_servers[ds].serve(arrive)
+                _mark(i, ds, ev.t_ms)
+                done = edge_servers[hidx(ds, ev.t_ms)].serve(arrive)
                 lat[i] = done + lm.client_edge_ms - ev.t_ms
                 continue
             if stale_ok:                        # serve stale, no wait
                 stale_n += 1
-                done = edge_servers[ds].serve(arrive)
+                if nonexact is not None:
+                    nonexact[i] = True
+                _mark(i, ds, ev.t_ms)
+                done = edge_servers[hidx(ds, ev.t_ms)].serve(arrive)
                 lat[i] = done + lm.client_edge_ms - ev.t_ms
                 continue
             # must wait for the shortcut push (global_ready)
             waited += 1
-            done = edge_servers[ds].serve(max(arrive, global_ready))
+            _mark(i, ds, ev.t_ms)
+            done = edge_servers[hidx(ds, ev.t_ms)].serve(
+                max(arrive, global_ready))
             lat[i] = done + lm.client_edge_ms - ev.t_ms
         elif scatter:
             # peer border-row exchange: one metro hop to fetch B[t] from
@@ -431,11 +539,14 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
             if arrive < global_ready:
                 if stale_ok:
                     stale_n += 1
+                    if nonexact is not None:
+                        nonexact[i] = True
                 else:
                     waited += 1
                     arrive = global_ready
             if inj is None:
-                done = edge_servers[ds].serve(arrive)
+                _mark(i, ds, ev.t_ms)
+                done = edge_servers[hidx(ds, ev.t_ms)].serve(arrive)
                 lat[i] = done + lm.peer_edge_ms + lm.client_edge_ms \
                     - ev.t_ms
                 continue
@@ -443,7 +554,8 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
             if src_dark and not inj.server_down(dt):
                 # rule 3 from the surviving min: the target district's
                 # server owns the lane — exact, same peer math
-                done = edge_servers[dt].serve(arrive)
+                _mark(i, dt, ev.t_ms)
+                done = edge_servers[hidx(dt, ev.t_ms)].serve(arrive)
                 lat[i] = done + lm.peer_edge_ms + lm.client_edge_ms \
                     - ev.t_ms
                 continue
@@ -455,13 +567,17 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                         - ev.t_ms
                 else:                           # flagged unavailable
                     degraded_n += 1
+                    if nonexact is not None:
+                        nonexact[i] = True
                     lat[i] = 2 * lm.client_edge_ms
                 continue
             ok, fault, charged, slow = inj.link_trial(ds, dt)
             if ok:
                 if slow:                        # degraded (slow) link
                     charged += (inj.plan.slow_factor - 1) * lm.peer_edge_ms
-                done = edge_servers[ds].serve(arrive + charged)
+                _mark(i, ds, ev.t_ms)
+                done = edge_servers[hidx(ds, ev.t_ms)].serve(
+                    arrive + charged)
                 lat[i] = done + lm.peer_edge_ms + lm.client_edge_ms \
                     - ev.t_ms
             elif not inj.center_down():
@@ -474,7 +590,10 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                 # stale previous-generation rows (or flagged +inf),
                 # served locally after the failed retries
                 degraded_n += 1
-                done = edge_servers[ds].serve(
+                if nonexact is not None:
+                    nonexact[i] = True
+                _mark(i, ds, ev.t_ms)
+                done = edge_servers[hidx(ds, ev.t_ms)].serve(
                     arrive - lm.peer_edge_ms + charged)
                 lat[i] = done + lm.client_edge_ms - ev.t_ms
         else:
@@ -482,6 +601,8 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
             if arrive < global_ready:
                 if stale_ok:    # the center's double-buffered old B serves
                     stale_n += 1
+                    if nonexact is not None:
+                        nonexact[i] = True
                 else:
                     waited += 1
                     arrive = global_ready
@@ -489,17 +610,25 @@ def simulate_edge(trace: list[QueryEvent], topo: Topology,
                 # forwarded path with the center dark: flagged local
                 # stale serve instead of an error
                 degraded_n += 1
+                if nonexact is not None:
+                    nonexact[i] = True
+                _mark(i, ds, ev.t_ms)
                 a = ev.t_ms + lm.client_edge_ms
-                done = edge_servers[ds].serve(a)
+                done = edge_servers[hidx(ds, ev.t_ms)].serve(a)
                 lat[i] = done + lm.client_edge_ms - ev.t_ms
                 continue
             done = center.serve(arrive)
             lat[i] = done + lm.edge_center_ms + lm.client_edge_ms - ev.t_ms
-    return SimResult.from_latencies(
+    res = SimResult.from_latencies(
         lat, lb_frac=certified_n / max(1, len(trace)),
         waited=waited / max(1, len(trace)),
         stale=stale_n / max(1, len(trace)),
         degraded=degraded_n / max(1, len(trace)))
+    if tl is not None:
+        res.migration_window_mask = win_mask
+        res.nonexact_mask = nonexact
+        res.migration_stale_frac = float(mig_stale.sum()) / max(1, len(trace))
+    return res
 
 
 def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
@@ -508,14 +637,19 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                            batch: BatchPolicy,
                            stale_ok: bool = False,
                            scatter: bool = False,
-                           inj=None) -> SimResult:
+                           inj=None, tl=None,
+                           handoff: bool = False) -> SimResult:
     """§4.2 routing with micro-batched service at every server: same
     freshness rules as the per-query path, but departures are assigned at
     batch flush time (see _BatchedServer).  ``scatter`` routes rule-3
     lanes to the source district's server over the peer link; ``inj``
     (a ``FaultInjector``) applies the same degradation ladder as the
-    per-query path (see simulate_edge)."""
-    edge_servers = [_BatchedServer(batch) for _ in range(num_districts)]
+    per-query path; ``tl`` (a ``_PlacementTimeline``) consolidates the
+    queues onto edge hosts and applies the migration schedule (see
+    simulate_edge)."""
+    edge_servers = [_BatchedServer(batch)
+                    for _ in range(tl.num_hosts if tl is not None
+                                   else num_districts)]
     center = _BatchedServer(batch)
     departures = np.empty(len(trace), dtype=np.float64)
     back_ms = np.empty(len(trace), dtype=np.float64)
@@ -523,6 +657,23 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
     waited = 0
     stale_n = 0
     degraded_n = 0
+    if tl is not None:
+        hidx = tl.host_at
+        win_mask = np.zeros(len(trace), dtype=bool)
+        mig_stale = np.zeros(len(trace), dtype=bool)
+        nonexact = np.zeros(len(trace), dtype=bool)
+    else:
+        def hidx(d, t_ms):
+            return d
+        win_mask = mig_stale = nonexact = None
+
+    def _mark(i, d, t_ms):
+        if tl is not None and tl.in_copy_window(d, t_ms):
+            win_mask[i] = True
+            if handoff:
+                mig_stale[i] = True
+                nonexact[i] = True
+
     lm = topo.latency
     for i, ev in enumerate(trace):
         if inj is not None:
@@ -534,6 +685,8 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
             back_ms[i] = lm.client_edge_ms
             if inj is not None and inj.server_down(ds):
                 degraded_n += 1     # dark district: center upper bound
+                if nonexact is not None:
+                    nonexact[i] = True
                 if not inj.center_down():
                     back_ms[i] = lm.edge_center_ms + lm.client_edge_ms
                     center.submit(i, arrive + lm.edge_center_ms,
@@ -542,36 +695,51 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                     departures[i] = arrive
                 continue
             if arrive >= global_ready:          # L_i⁺ fresh: exact at edge
-                edge_servers[ds].submit(i, arrive, departures)
+                _mark(i, ds, ev.t_ms)
+                edge_servers[hidx(ds, ev.t_ms)].submit(i, arrive,
+                                                       departures)
                 continue
             # rebuild window: LB certificate on the fresh plain L_i
             if arrive >= local_ready and certified_fn(ev.s, ev.t):
                 certified_n += 1
-                edge_servers[ds].submit(i, arrive, departures)
+                _mark(i, ds, ev.t_ms)
+                edge_servers[hidx(ds, ev.t_ms)].submit(i, arrive,
+                                                       departures)
                 continue
             if stale_ok:                        # serve stale, no wait
                 stale_n += 1
-                edge_servers[ds].submit(i, arrive, departures)
+                if nonexact is not None:
+                    nonexact[i] = True
+                _mark(i, ds, ev.t_ms)
+                edge_servers[hidx(ds, ev.t_ms)].submit(i, arrive,
+                                                       departures)
                 continue
             waited += 1
-            edge_servers[ds].submit(i, max(arrive, global_ready),
-                                    departures)
+            _mark(i, ds, ev.t_ms)
+            edge_servers[hidx(ds, ev.t_ms)].submit(
+                i, max(arrive, global_ready), departures)
         elif scatter:
             arrive = ev.t_ms + lm.client_edge_ms + lm.peer_edge_ms
             back_ms[i] = lm.peer_edge_ms + lm.client_edge_ms
             if arrive < global_ready:
                 if stale_ok:
                     stale_n += 1
+                    if nonexact is not None:
+                        nonexact[i] = True
                 else:
                     waited += 1
                     arrive = global_ready
             if inj is None:
-                edge_servers[ds].submit(i, arrive, departures)
+                _mark(i, ds, ev.t_ms)
+                edge_servers[hidx(ds, ev.t_ms)].submit(i, arrive,
+                                                       departures)
                 continue
             src_dark = inj.server_down(ds)
             if src_dark and not inj.server_down(dt):
                 # surviving-min reroute: target server, same peer math
-                edge_servers[dt].submit(i, arrive, departures)
+                _mark(i, dt, ev.t_ms)
+                edge_servers[hidx(dt, ev.t_ms)].submit(i, arrive,
+                                                       departures)
                 continue
             if src_dark:                        # both districts dark
                 if not inj.center_down():
@@ -580,6 +748,8 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
                                   + lm.edge_center_ms, departures)
                 else:
                     degraded_n += 1
+                    if nonexact is not None:
+                        nonexact[i] = True
                     back_ms[i] = lm.client_edge_ms
                     departures[i] = ev.t_ms + lm.client_edge_ms
                 continue
@@ -587,38 +757,52 @@ def _simulate_edge_batched(trace: list[QueryEvent], topo: Topology,
             if ok:
                 if slow:
                     charged += (inj.plan.slow_factor - 1) * lm.peer_edge_ms
-                edge_servers[ds].submit(i, arrive + charged, departures)
+                _mark(i, ds, ev.t_ms)
+                edge_servers[hidx(ds, ev.t_ms)].submit(i, arrive + charged,
+                                                       departures)
             elif not inj.center_down():         # forwarded: still exact
                 back_ms[i] = lm.edge_center_ms + lm.client_edge_ms
                 center.submit(i, arrive - lm.peer_edge_ms + charged
                               + lm.edge_center_ms, departures)
             else:                               # local stale, flagged
                 degraded_n += 1
-                back_ms[i] = lm.client_edge_ms
-                edge_servers[ds].submit(i, arrive - lm.peer_edge_ms
-                                        + charged, departures)
+                if nonexact is not None:
+                    nonexact[i] = True
+                _mark(i, ds, ev.t_ms)
+                edge_servers[hidx(ds, ev.t_ms)].submit(
+                    i, arrive - lm.peer_edge_ms + charged, departures)
         else:
             arrive = ev.t_ms + lm.client_edge_ms + lm.edge_center_ms
             back_ms[i] = lm.edge_center_ms + lm.client_edge_ms
             if arrive < global_ready:
                 if stale_ok:
                     stale_n += 1
+                    if nonexact is not None:
+                        nonexact[i] = True
                 else:
                     waited += 1
                     arrive = global_ready
             if inj is not None and inj.center_down():
                 degraded_n += 1     # center dark: flagged local serve
+                if nonexact is not None:
+                    nonexact[i] = True
+                _mark(i, ds, ev.t_ms)
                 back_ms[i] = lm.client_edge_ms
-                edge_servers[ds].submit(i, ev.t_ms + lm.client_edge_ms,
-                                        departures)
+                edge_servers[hidx(ds, ev.t_ms)].submit(
+                    i, ev.t_ms + lm.client_edge_ms, departures)
                 continue
             center.submit(i, arrive, departures)
     for srv in edge_servers:
         srv.finish(departures)
     center.finish(departures)
     lat = departures + back_ms - np.array([ev.t_ms for ev in trace])
-    return SimResult.from_latencies(
+    res = SimResult.from_latencies(
         lat, lb_frac=certified_n / max(1, len(trace)),
         waited=waited / max(1, len(trace)),
         stale=stale_n / max(1, len(trace)),
         degraded=degraded_n / max(1, len(trace)))
+    if tl is not None:
+        res.migration_window_mask = win_mask
+        res.nonexact_mask = nonexact
+        res.migration_stale_frac = float(mig_stale.sum()) / max(1, len(trace))
+    return res

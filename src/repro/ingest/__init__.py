@@ -17,13 +17,15 @@ continent-sized arc store never materializes in float32:
   rejects 0-based or out-of-range vertex ids with a clear error;
 * ``synth`` — ``synthetic_continent``: a deterministic seeded district
   mosaic (10⁵–10⁶ vertices, integer-second weights) so CI exercises
-  road-network-shaped inputs without downloads;
+  road-network-shaped inputs without downloads, and ``closure_storm``:
+  a seeded structural scenario (edges close and reopen each epoch) for
+  the ``repro.topo`` dynamic-topology path;
 * ``datasets`` — checksum-pinned registry of the DIMACS USA extracts
   with an **opt-in** fetch path (never contacted by tests or CI).
 """
 from .csr import CSRArrays, CSRBuilder
 from .dimacs import DimacsFormatError, iter_gr, load_gr_csr, load_gr_graph
-from .synth import synthetic_continent
+from .synth import closure_storm, synthetic_continent
 from .datasets import DATASETS, DatasetSpec, dataset_path, fetch, sha256_of
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -7,6 +7,7 @@ from .distance_batcher import DistanceBatcher, DistanceRequest
 from .loadgen import (LoadReport, OpenLoopLoadGen, close_rebuild_window,
                       open_rebuild_window, request_rtt_ms)
 from .service import (CERTIFIED_STALE, CERTIFY_OR_WAIT, EXACT, INSTALL_NOW,
+                      MIGRATION_DUAL, MIGRATION_HANDOFF, MIGRATION_MODES,
                       REBUILD_MODES, STALE, STALE_OK, BucketedPlane,
                       DistanceService, QueryPlan, QueryPlane, QueryRequest,
                       QueryResult, ResultBatch, ScalarLoopPlane,
@@ -19,4 +20,5 @@ __all__ = ["BatchedDecoder", "Request", "DistanceBatcher",
            "QueryPlane", "QueryPlan", "QueryRequest", "QueryResult",
            "ResultBatch", "BucketedPlane", "ScalarLoopPlane",
            "INSTALL_NOW", "CERTIFY_OR_WAIT", "STALE_OK", "REBUILD_MODES",
+           "MIGRATION_DUAL", "MIGRATION_HANDOFF", "MIGRATION_MODES",
            "EXACT", "CERTIFIED_STALE", "STALE"]

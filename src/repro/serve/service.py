@@ -77,6 +77,11 @@ CERTIFIED_STALE = "certified_stale"
 STALE = "stale"
 _EXACTNESS = (EXACT, CERTIFIED_STALE, STALE)
 
+# -- migration-window disciplines (district repartitioning, repro.topo) ------
+MIGRATION_DUAL = "dual"
+MIGRATION_HANDOFF = "handoff"
+MIGRATION_MODES = (MIGRATION_DUAL, MIGRATION_HANDOFF)
+
 ENGINE_PLACEMENTS = ("auto", "replicated", "sharded", "scatter_gather")
 LABEL_DTYPE_CHOICES = ("auto", "float32", "uint16", "int16")
 
@@ -111,6 +116,12 @@ class ServingPolicy:
     uint16 only when the fit is lossless, so auto never changes an
     answer), ``"float32"``, ``"uint16"``, or ``"int16"`` (explicit
     integer dtypes are honored even when the fit is lossy).
+    ``migration`` is the district-migration window discipline for the
+    §5 simulator: ``"dual"`` (the source host keeps serving the moving
+    district exactly until the routing swap lands — no staleness,
+    the engine-swap semantics of ``EdgeSystem.migrate``) or
+    ``"handoff"`` (queries landing inside the declared copy window are
+    flagged stale; zero non-exact answers outside it).
     """
     engine: str = "auto"
     shard_border: bool | None = None
@@ -119,6 +130,7 @@ class ServingPolicy:
     batch: "BatchPolicy | None" = None
     faults: "FaultPlan | None" = None
     label_dtype: str = "auto"
+    migration: str = "dual"
 
     def __post_init__(self):
         if self.engine not in ENGINE_PLACEMENTS:
@@ -127,6 +139,9 @@ class ServingPolicy:
         if self.rebuild not in REBUILD_MODES:
             raise ValueError(f"rebuild must be one of {REBUILD_MODES}, "
                              f"got {self.rebuild!r}")
+        if self.migration not in MIGRATION_MODES:
+            raise ValueError(f"migration must be one of {MIGRATION_MODES}, "
+                             f"got {self.migration!r}")
         if self.label_dtype not in LABEL_DTYPE_CHOICES:
             raise ValueError(
                 f"label_dtype must be one of {LABEL_DTYPE_CHOICES}, "
@@ -194,6 +209,7 @@ class ResultBatch:
     _waited: np.ndarray | None = None   # (B,) bool — deferred to the push
     real: np.ndarray | None = None      # (B,) bool — False for padding
     _degraded: np.ndarray | None = None  # (B,) object — fault reasons
+    _ds: np.ndarray | None = None       # (B,) int32 source districts
 
     def __len__(self) -> int:
         return len(self.distances)
@@ -202,9 +218,23 @@ class ResultBatch:
     def rules(self) -> np.ndarray:
         if self._rules is None:
             assignment, ss, ts, client = self._route
+            # keep the source districts for district_counts — the load
+            # signal the RebalancePlanner consumes — before the routing
+            # inputs are dropped
+            self._ds = assignment[np.asarray(ss)].astype(np.int32)
             _, _, self._rules = bucket_by_rule(assignment, ss, ts, client)
             self._route = None
         return self._rules
+
+    def district_counts(self, num_districts: int) -> np.ndarray:
+        """(m,) int64 query count per source district (real rows only) —
+        the per-batch load signal ``DistanceService.district_load``
+        accumulates for the ``repro.topo`` rebalance planner."""
+        _ = self.rules                          # materialize _ds
+        ds = self._ds
+        if self.real is not None:
+            ds = ds[self.real]
+        return np.bincount(ds, minlength=num_districts).astype(np.int64)
 
     @property
     def exactness_codes(self) -> np.ndarray:
@@ -425,6 +455,10 @@ class DistanceService:
         self.system = system
         self.policy = policy if policy is not None else ServingPolicy()
         self._stats: dict[str, int] = _fresh_counters()
+        # per-district query counts over the service lifetime — the load
+        # signal repro.topo.RebalancePlanner.observe_load consumes
+        self._district_load = np.zeros(system.partition.num_districts,
+                                       dtype=np.int64)
         self._pending: list[ResultBatch] = []
         # (resolution key, engine) — avoids re-walking the router's
         # engine-selection logic on every submit; the key captures
@@ -446,9 +480,19 @@ class DistanceService:
         every ``_MAX_PENDING`` submits)."""
         if self._pending:
             pending, self._pending = self._pending, []
+            m = len(self._district_load)
             for batch in pending:
                 self._absorb(batch.counters())
+                self._district_load += batch.district_counts(m)
         return self._stats
+
+    @property
+    def district_load(self) -> np.ndarray:
+        """(m,) int64 per-district query counts (source district of each
+        real query) over the service lifetime.  Feed deltas of this to
+        ``repro.topo.RebalancePlanner.observe_load``."""
+        _ = self.stats                          # fold the pending queue
+        return self._district_load
 
     def _absorb(self, counters: dict[str, int]) -> None:
         for k, v in counters.items():
@@ -471,9 +515,11 @@ class DistanceService:
             return None
         dtype = (self.system.label_dtype if p.label_dtype == "auto"
                  else p.label_dtype)
+        placement = getattr(self.system, "placement", None)
         key = (self.system.center.version, p.engine, p.shard_border,
                self.system.prefer_sharded, self.system.shard_border,
-               p.faults, dtype or "auto")
+               p.faults, dtype or "auto",
+               placement.key() if placement is not None else None)
         if self._plane_cache is not None and self._plane_cache[0] == key:
             return self._plane_cache[1]
         if p.engine == "scatter_gather":
@@ -580,6 +626,7 @@ class DistanceService:
                       "rule3": int(rule == Rule.CROSS),
                       "lb_certified": int(exactness == CERTIFIED_STALE),
                       "lb_fallback_attempts": int(fallback)})
+        self._district_load[ds] += 1
         return QueryResult(dist, rule, exactness, self.index_version,
                            time.perf_counter() - t0, waited)
 

@@ -1,0 +1,14 @@
+"""Dynamic-topology subsystem: structural deltas (road closures and
+openings as genuine CSR changes), scoped structural index repair, and
+online district repartitioning between edge servers.
+
+``structural`` classifies topology diffs and edits graphs safely;
+``rebalance`` watches per-district query load and per-edge resident
+bytes and plans/executes live district migrations over the existing
+engine-swap machinery (``EdgeSystem.migrate``)."""
+from .rebalance import (EdgePlacement, MigrationMove, MigrationPlan,
+                        RebalancePlanner, district_bytes_of)
+from .structural import (StructuralDelta, classify_structural,
+                         close_edges, open_edges)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,7 +1,9 @@
 """Dynamic traffic updates: delta classification, delta-scoped index
 repair (bit-for-bit equal to a full rebuild), and traffic-scenario
-generators for the simulator and benchmarks."""
-from .delta import WeightDelta, classify_delta
+generators for the simulator and benchmarks.  Structural deltas
+(closures/openings) live in ``repro.topo``; ``IncrementalBuilder``
+repairs both kinds."""
+from .delta import WeightDelta, classify_delta, weights_from_arc_updates
 from .incremental import IncrementalBuilder
 from .scenarios import (SCENARIOS, incident, regional_slowdown,
                         rush_hour_corridor, scenario_weights,

@@ -90,3 +90,44 @@ def classify_delta(g: Graph, part: Partition,
     return WeightDelta(dirty, int(dirty.sum()) // 2, g.num_edges,
                        dirty_districts, bool((~intra).any()),
                        part.num_districts)
+
+
+def weights_from_arc_updates(g: Graph, u, v, w) -> np.ndarray:
+    """CSR-aligned weight array with the undirected edges (u_i, v_i) set
+    to ``w_i`` — the validated entry point for sparse traffic updates.
+
+    Every named edge is checked against ``g``'s arc set; an unknown pair
+    raises a ``ValueError`` naming the offending ``(u, v)`` instead of
+    being silently dropped or misclassified as dirty downstream.  Both
+    CSR arcs of each edge are written, so the result always passes
+    ``with_weights`` symmetry validation.  A pair listed twice keeps the
+    last weight (both occurrences hit the same two arcs).
+    """
+    u = np.atleast_1d(np.asarray(u, dtype=np.int64))
+    v = np.atleast_1d(np.asarray(v, dtype=np.int64))
+    if u.shape != v.shape:
+        raise ValueError("endpoint arrays must have the same length")
+    w = np.broadcast_to(np.asarray(w, dtype=np.float32), u.shape)
+    n = g.num_vertices
+    oob = (u < 0) | (u >= n) | (v < 0) | (v >= n) | (u == v)
+    if oob.any():
+        j = int(np.nonzero(oob)[0][0])
+        raise ValueError(f"({int(u[j])}, {int(v[j])}) is not a valid "
+                         f"edge of a graph with {n} vertices")
+    keys = g._arc_keys()                       # canonical key per CSR arc
+    order = np.argsort(keys, kind="stable")
+    skeys = keys[order]
+    want = np.minimum(u, v) * n + np.maximum(u, v)
+    lo = np.searchsorted(skeys, want, side="left")
+    missing = (lo >= len(skeys)) | (skeys[np.minimum(lo, len(skeys) - 1)]
+                                    != want)
+    if missing.any():
+        j = int(np.nonzero(missing)[0][0])
+        raise ValueError(f"edge ({int(u[j])}, {int(v[j])}) is not in the "
+                         "graph's arc set (a closure/opening is a "
+                         "structural delta — see repro.topo)")
+    out = g.weights.copy()
+    # both CSR arcs of an edge share the canonical key and sort adjacent
+    out[order[lo]] = w
+    out[order[lo + 1]] = w
+    return out

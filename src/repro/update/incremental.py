@@ -51,11 +51,12 @@ import numpy as np
 
 from ..core.graph import Graph
 from ..core.jax_builder import (BuildState, build_border_labels_stages,
-                                stage_a_intra_distances, stage_c_full_table,
-                                stage_d_prune)
+                                hub_prune_order, stage_a_intra_distances,
+                                stage_c_full_table, stage_d_prune)
 from ..core.labels import BorderLabels
 from ..core.partition import Partition
 from ..kernels.minplus.ops import minplus as mp_minplus
+from ..topo.structural import StructuralDelta, classify_structural
 from .delta import WeightDelta, classify_delta
 
 INF = np.float32(np.inf)
@@ -203,6 +204,134 @@ class IncrementalBuilder:
                                                             st.overlay,
                                                             st.closure)
 
+        return self._scoped_tail(t0, g_new, packed, intra, overlay,
+                                 closure, closure_reused, dirty, st)
+
+    # -- structural repair ---------------------------------------------------
+
+    def apply_structural(self, g_new: Graph, part: Partition,
+                         delta: StructuralDelta | None = None
+                         ) -> tuple[BorderLabels, dict]:
+        """Repair the cached index to ``g_new``'s *topology* (closures /
+        openings, plus any weight moves on surviving edges).
+
+        Same contract as ``apply_delta`` — the repaired ``BorderLabels``
+        is bitwise equal to ``build_border_labels_jax`` on ``g_new`` —
+        but the repair ladder has one more rung: when a structural cross
+        edge demotes or promotes a border vertex (``border_changed``)
+        the stable layer itself (border sets, packed shapes, label
+        width) is invalid and the pipeline honestly re-runs in full.
+        Otherwise the scope is exactly the weight path's — dirty
+        districts' stage A (the dense adjacency rebuild picks the new
+        arc set up for free), an overlay patch that rewrites the whole
+        cross region (so a closed cross arc's entry actually
+        disappears), the warm-started closure, and row-scoped C/D — plus
+        a hub-order check: structural deltas move degrees, and when the
+        degree-ranked prune order moves, stage D re-runs globally under
+        the new order.
+        """
+        t0 = time.perf_counter()
+        if self.state is None or self._assignment is not part.assignment:
+            labels = self.build_full(g_new, part)
+            return labels, {
+                "incremental": False, "seconds": time.perf_counter() - t0,
+                "changed_rows": np.ones(g_new.num_vertices, dtype=bool),
+                "dirty_districts": np.arange(part.num_districts,
+                                             dtype=np.int32),
+                "border_changed": False,
+                "closure_reused": False, "repruned_rows": "full"}
+        if self._indptr is g_new.indptr and self._indices is g_new.indices:
+            # same CSR identity: a weight delta in structural clothing
+            labels, report = self.apply_delta(g_new, part)
+            report.setdefault("border_changed", False)
+            return labels, report
+        st = self.state
+        g_old = Graph(self._indptr, self._indices, st.weights)
+        if delta is None or delta.num_edges_old != g_old.num_edges \
+                or delta.num_edges_new != g_new.num_edges:
+            # the caller's delta was classified against a different base —
+            # re-classify against the cache's own topology snapshot
+            delta = classify_structural(g_old, part, g_new)
+        n = g_new.num_vertices
+        if delta.is_empty:
+            # identical edge set + weights under a fresh CSR identity
+            # (arc order may differ; weights stay aligned with indices)
+            self._indptr, self._indices = g_new.indptr, g_new.indices
+            self.state = replace(st, weights=g_new.weights)
+            return st.labels(), {
+                "incremental": True, "seconds": time.perf_counter() - t0,
+                "changed_rows": np.zeros(n, dtype=bool),
+                "dirty_districts": delta.dirty_districts,
+                "border_changed": False,
+                "closure_reused": True, "repruned_rows": 0}
+        packed = st.packed
+        if delta.border_changed or \
+                len(delta.dirty_districts) == packed.num_districts:
+            # a border vertex was promoted/demoted (stable layer invalid:
+            # packed shapes and label width q move) or every district is
+            # dirty anyway — run the full pipeline, keep honest accounting
+            old_table = st.table
+            labels = self.build_full(g_new, part)
+            changed = (labels.table != old_table).any(axis=1) \
+                if labels.table.shape == old_table.shape \
+                else np.ones(n, dtype=bool)
+            return labels, {
+                "incremental": False, "seconds": time.perf_counter() - t0,
+                "changed_rows": changed,
+                "dirty_districts": delta.dirty_districts,
+                "border_changed": delta.border_changed,
+                "closure_reused": False, "repruned_rows": "full"}
+        q = len(packed.border_ids)
+        if q == 0:
+            # isolated districts, empty B: the (n, 0) table depends on
+            # nothing — adopt the new topology outright
+            self._indptr, self._indices = g_new.indptr, g_new.indices
+            self.state = replace(st, weights=g_new.weights)
+            return st.labels(), {
+                "incremental": True, "seconds": time.perf_counter() - t0,
+                "changed_rows": np.zeros(n, dtype=bool),
+                "dirty_districts": delta.dirty_districts,
+                "border_changed": False,
+                "closure_reused": True, "repruned_rows": 0}
+
+        # stage A on the dirty districts only — the dense adjacency is
+        # rebuilt from g_new, so closures/openings land automatically
+        dirty = delta.dirty_districts
+        intra = st.intra
+        if len(dirty):
+            intra = intra.copy()
+            intra[dirty] = self._stage_a_subset(g_new, packed, dirty)
+
+        overlay = self._patch_overlay_structural(g_old, g_new, part,
+                                                 packed, intra, dirty,
+                                                 st.overlay)
+        closure, closure_reused = self._closure_incremental(overlay,
+                                                            st.overlay,
+                                                            st.closure)
+        # degrees moved with the arc set; the hub prune order may follow
+        order = hub_prune_order(g_new, packed.border_ids) if self.prune \
+            else None
+        return self._scoped_tail(t0, g_new, packed, intra, overlay,
+                                 closure, closure_reused, dirty, st,
+                                 prune_order=order,
+                                 extra={"border_changed": False})
+
+    def _scoped_tail(self, t0: float, g_new: Graph, packed,
+                     intra: np.ndarray, overlay: np.ndarray,
+                     closure: np.ndarray, closure_reused: bool,
+                     dirty: np.ndarray, st: BuildState, *,
+                     prune_order: np.ndarray | None = None,
+                     extra: dict | None = None
+                     ) -> tuple[BorderLabels, dict]:
+        """Stages C/D scoped to the rows whose inputs moved, then the
+        state store — shared by the weight and structural repair paths.
+
+        ``prune_order`` (structural path) is the freshly computed hub
+        order for the new topology; when it differs from the cached one
+        every row's λ estimates read the hubs in a different rank order,
+        so stage D re-runs globally under the new order.
+        """
+        n = g_new.num_vertices
         # stage C scoped to districts whose inputs moved: dirty ones, plus
         # any district one of whose borders' closure rows changed
         changed_slot_rows = (closure != st.closure).any(axis=1)
@@ -222,21 +351,34 @@ class IncrementalBuilder:
             unpruned[rows] = self._stage_c_subset(intra, packed, closure,
                                                   affected, n)[rows]
 
-        # stage D scoped to the rows whose unpruned values moved — global
-        # when any hub (border) row moved, since every row's prune reads
-        # the hub rows
-        table, repruned = self._stage_d_scoped(unpruned, st, packed)
+        order = st.prune_order
+        if self.prune and prune_order is not None and \
+                not np.array_equal(prune_order, st.prune_order):
+            order = prune_order
+            table = np.asarray(stage_d_prune(jnp.asarray(unpruned),
+                                             jnp.asarray(packed.border_ids),
+                                             jnp.asarray(order)))
+            repruned = "full"
+        else:
+            # stage D scoped to the rows whose unpruned values moved —
+            # global when any hub (border) row moved, since every row's
+            # prune reads the hub rows
+            table, repruned = self._stage_d_scoped(unpruned, st, packed)
 
         changed_rows = (table != st.table).any(axis=1)
         self.state = BuildState(packed, intra, overlay, closure, unpruned,
-                                table, st.prune_order, g_new.weights)
-        return BorderLabels(packed.border_ids, table), {
+                                table, order, g_new.weights)
+        self._indptr, self._indices = g_new.indptr, g_new.indices
+        report = {
             "incremental": True, "seconds": time.perf_counter() - t0,
             "changed_rows": changed_rows,
             "dirty_districts": dirty,
             "affected_districts": affected.astype(np.int32),
             "closure_reused": closure_reused,
             "repruned_rows": repruned}
+        if extra:
+            report.update(extra)
+        return BorderLabels(packed.border_ids, table), report
 
     # -- stage helpers -------------------------------------------------------
 
@@ -271,6 +413,25 @@ class IncrementalBuilder:
         reproduce the full `_overlay_from_intra` values for their region,
         so the patched matrix is bitwise equal to a from-scratch one."""
         w = cached.copy()
+        IncrementalBuilder._patch_blocks(w, packed, intra, dirty)
+        if delta.cross_dirty:
+            n = g_new.num_vertices
+            q = len(packed.border_ids)
+            slot = -np.ones(n, dtype=np.int64)
+            slot[packed.border_ids] = np.arange(q)
+            src = g_new.arc_sources()
+            cross = part.assignment[src] != part.assignment[g_new.indices]
+            su, sv = slot[src[cross]], slot[g_new.indices[cross]]
+            w[su, sv] = INF
+            np.minimum.at(w, (su, sv), g_new.weights[cross])
+        return w
+
+    @staticmethod
+    def _patch_blocks(w: np.ndarray, packed, intra: np.ndarray,
+                      dirty: np.ndarray) -> None:
+        """Rewrite the dirty districts' border blocks in place from their
+        fresh stage-A rows (bitwise equal to `_overlay_from_intra` for
+        those regions)."""
         for i in dirty:
             bslots = packed.border_slot[i]
             bpos = packed.border_pos[i]
@@ -283,16 +444,37 @@ class IncrementalBuilder:
             init = np.where(np.equal.outer(bs, bs), 0.0, INF) \
                 .astype(np.float32)
             w[np.ix_(bs, bs)] = np.minimum(init, block)
-        if delta.cross_dirty:
-            n = g_new.num_vertices
-            q = len(packed.border_ids)
-            slot = -np.ones(n, dtype=np.int64)
-            slot[packed.border_ids] = np.arange(q)
-            src = g_new.arc_sources()
-            cross = part.assignment[src] != part.assignment[g_new.indices]
-            su, sv = slot[src[cross]], slot[g_new.indices[cross]]
-            w[su, sv] = INF
-            np.minimum.at(w, (su, sv), g_new.weights[cross])
+
+    @staticmethod
+    def _patch_overlay_structural(g_old: Graph, g_new: Graph,
+                                  part: Partition, packed,
+                                  intra: np.ndarray, dirty: np.ndarray,
+                                  cached: np.ndarray) -> np.ndarray:
+        """Structural twin of `_patch_overlay`: dirty districts' border
+        blocks, then the whole cross-edge region rebuilt from scratch —
+        the union of the old and new cross arc sets is reset to +inf
+        before the new arcs' minima are scattered in, so a closed cross
+        arc's entry actually disappears instead of lingering at its old
+        weight.  Valid only when the border sets are unchanged
+        (``border_changed`` falls back upstream): every old or new cross
+        endpoint then has a live slot, the disjointness of blocks and
+        cross entries holds for both graphs, and min over the identical
+        new arc multiset is bitwise what `_overlay_from_intra` computes.
+        """
+        w = cached.copy()
+        IncrementalBuilder._patch_blocks(w, packed, intra, dirty)
+        n = g_new.num_vertices
+        q = len(packed.border_ids)
+        slot = -np.ones(n, dtype=np.int64)
+        slot[packed.border_ids] = np.arange(q)
+        for g in (g_old, g_new):
+            src = g.arc_sources()
+            cross = part.assignment[src] != part.assignment[g.indices]
+            w[slot[src[cross]], slot[g.indices[cross]]] = INF
+        src = g_new.arc_sources()
+        cross = part.assignment[src] != part.assignment[g_new.indices]
+        np.minimum.at(w, (slot[src[cross]], slot[g_new.indices[cross]]),
+                      g_new.weights[cross])
         return w
 
     def _closure_incremental(self, overlay: np.ndarray,

@@ -210,3 +210,50 @@ def test_loadgen_warmup_touches_no_counters(service):
     before = dict(service.stats)
     gen.warmup()
     assert dict(service.stats) == before
+
+
+# -- closed-loop comparison mode --------------------------------------------
+
+def test_closed_loop_validation(service):
+    with pytest.raises(ValueError, match="closed_loop"):
+        OpenLoopLoadGen(service, closed_loop=0)
+
+
+def test_closed_loop_deterministic(service):
+    def run():
+        return OpenLoopLoadGen(service, batch_size=64, window_ms=2.0,
+                               service_ms_override=DET, closed_loop=16,
+                               seed=9).run(2_000, 0.5, 1_000.0)
+    a, b = run(), run()
+    assert a.row() == b.row()
+    assert a.num_clients == 16 and a.shed == 0
+    # the closed fleet reports per-district load like the open loop
+    assert a.district_load.sum() == a.admitted
+
+
+def test_closed_loop_self_throttles_under_overload(service):
+    """The closed-loop fallacy, as numbers: at an offered rate far past
+    capacity the open loop exposes an unbounded queue (p99 blows up)
+    while a closed fleet of N waits for each answer — offered collapses
+    toward what the server can do and the tail stays flat."""
+    slow = (5.0, 0.5)
+    open_rep = OpenLoopLoadGen(service, batch_size=64, window_ms=2.0,
+                               service_ms_override=slow, seed=4
+                               ).run(2_000, 1.0, 1_000.0,
+                                     max_arrivals=2_000)
+    closed_rep = OpenLoopLoadGen(service, batch_size=64, window_ms=2.0,
+                                 service_ms_override=slow,
+                                 closed_loop=32, seed=4
+                                 ).run(2_000, 1.0, 1_000.0)
+    assert closed_rep.offered < open_rep.offered
+    assert closed_rep.p99_ms < open_rep.p99_ms
+
+
+def test_open_loop_report_carries_district_load(service):
+    rep = OpenLoopLoadGen(service, batch_size=128,
+                          service_ms_override=DET, seed=10
+                          ).run(4_000, 0.5, 500.0)
+    m = service.system.partition.num_districts
+    assert rep.district_load.shape == (m,)
+    assert rep.district_load.sum() == rep.admitted - rep.shed
+    assert "district_load" not in rep.row()

@@ -1,0 +1,550 @@
+"""Dynamic-topology subsystem (``repro.topo``): structural deltas
+(closures/openings as genuine CSR edits), bitwise structural-repair
+parity against full rebuilds, closure-storm scenario invariants,
+online repartitioning (placement → planner → atomic migrate), and
+migration exactness under simulated live load.
+
+The 8-device variants run twice: in-process in the tier1-mesh8 CI job
+(XLA_FLAGS forces an 8-device host mesh for the whole session) and as
+``slow``-marked subprocess tests here, so single-device tier-1 also
+covers the sharded paths.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import bfs_grow_partition, dijkstra, grid_road_network
+from repro.core.partition import border_mask
+from repro.edge import EdgeSystem, MigrationEvent, Topology, make_trace, \
+    simulate_edge
+from repro.edge.simulator import UpdateSchedule, migrations_from_plan
+from repro.ingest import closure_storm
+from repro.serve import ServingPolicy
+from repro.topo import (EdgePlacement, RebalancePlanner, classify_structural,
+                        close_edges, district_bytes_of, open_edges)
+from repro.update import (IncrementalBuilder, scenario_weights,
+                          weights_from_arc_updates)
+
+# hand-verified on this (10×10, 5-district) case, see the fixtures:
+INTRA_EDGE = (0, 1)        # intra edge, both endpoints interior
+STABLE_CROSS = (22, 23)    # cross edge, both endpoints keep >= 2 cross arcs
+PROMOTE_PAIR = (0, 4)      # interior vertices of different districts,
+                           # not adjacent: opening promotes both
+BORDER_PAIR = (2, 13)      # border vertices of different districts,
+                           # not adjacent: opening moves no border
+
+
+@pytest.fixture(scope="module")
+def grid():
+    g = grid_road_network(10, 10, seed=11)
+    part = bfs_grow_partition(g, 5, seed=0)
+    return g, part
+
+
+# ---------------------------------------------------------------------------
+# structural delta classification
+# ---------------------------------------------------------------------------
+
+def test_classify_intra_closure_scopes_one_district(grid):
+    g, part = grid
+    u, v = INTRA_EDGE
+    assert part.assignment[u] == part.assignment[v]
+    bm = border_mask(g, part)
+    assert not bm[u] and not bm[v]
+    delta = classify_structural(g, part, close_edges(g, [u], [v]))
+    assert len(delta.removed) == 1 and len(delta.added) == 0
+    assert delta.num_reweighted == 0
+    assert delta.dirty_districts.tolist() == [int(part.assignment[u])]
+    assert not delta.cross_dirty and not delta.border_changed
+    assert 0 < delta.frac_dirty < 0.01
+
+
+def test_classify_cross_closure_without_border_move(grid):
+    g, part = grid
+    u, v = STABLE_CROSS
+    assert part.assignment[u] != part.assignment[v]
+    g_new = close_edges(g, [u], [v])
+    delta = classify_structural(g, part, g_new)
+    assert delta.cross_dirty and not delta.border_changed
+    assert len(delta.dirty_districts) == 0
+    np.testing.assert_array_equal(border_mask(g, part),
+                                  border_mask(g_new, part))
+
+
+def test_classify_border_promotion_and_demotion(grid):
+    g, part = grid
+    # opening a cross edge between two interior vertices promotes both
+    u, v = PROMOTE_PAIR
+    delta = classify_structural(g, part, open_edges(g, [u], [v], [2.5]))
+    assert delta.cross_dirty and delta.border_changed
+    # a border vertex whose LAST cross arc closes is demoted
+    a = part.assignment
+    eu, ev, _ = g.edge_list()
+    cross = a[eu] != a[ev]
+    cc = np.zeros(g.num_vertices, dtype=np.int64)
+    np.add.at(cc, eu[cross], 1)
+    np.add.at(cc, ev[cross], 1)
+    k = int(np.nonzero(cross & ((cc[eu] == 1) | (cc[ev] == 1)))[0][0])
+    delta = classify_structural(
+        g, part, close_edges(g, [int(eu[k])], [int(ev[k])]))
+    assert delta.cross_dirty and delta.border_changed
+    # but a new cross edge between two EXISTING borders moves nothing
+    u, v = BORDER_PAIR
+    delta = classify_structural(g, part, open_edges(g, [u], [v], [2.5]))
+    assert delta.cross_dirty and not delta.border_changed
+
+
+def test_classify_rejects_vertex_growth(grid):
+    g, part = grid
+    g_big = grid_road_network(11, 10, seed=11)
+    with pytest.raises(ValueError, match="vertex set fixed"):
+        classify_structural(g, part, g_big)
+
+
+def test_close_open_validation_errors(grid):
+    g, _ = grid
+    u, v = INTRA_EDGE
+    with pytest.raises(ValueError, match="no such edge"):
+        close_edges(g, [u], [u + 55])
+    with pytest.raises(ValueError, match="more than once"):
+        close_edges(g, [u, v], [v, u])
+    with pytest.raises(ValueError, match="already exists"):
+        open_edges(g, [u], [v], [1.0])
+    with pytest.raises(ValueError, match="finite positive"):
+        open_edges(g, [0], [55], [0.0])
+    with pytest.raises(ValueError, match="self-loop"):
+        close_edges(g, [3], [3])
+    with pytest.raises(ValueError, match="out of range"):
+        open_edges(g, [0], [g.num_vertices], [1.0])
+
+
+def test_close_then_reopen_roundtrips(grid):
+    g, part = grid
+    eu, ev, ew = g.edge_list()
+    sel = [3, 40, 77]
+    g2 = close_edges(g, eu[sel], ev[sel])
+    assert g2.num_edges == g.num_edges - len(sel)
+    g3 = open_edges(g2, eu[sel], ev[sel], ew[sel])
+    assert classify_structural(g, part, g3).is_empty
+    np.testing.assert_array_equal(
+        np.sort(g._arc_keys()), np.sort(g3._arc_keys()))
+
+
+def test_weights_from_arc_updates_validates(grid):
+    g, _ = grid
+    u, v = INTRA_EDGE
+    w2 = weights_from_arc_updates(g, [u], [v], [9.5])
+    src = np.repeat(np.arange(g.num_vertices, dtype=np.int64),
+                    np.diff(g.indptr))
+    sel = ((src == u) & (g.indices == v)) | ((src == v) & (g.indices == u))
+    assert (w2[sel] == np.float32(9.5)).all()         # both CSR arcs
+    assert (w2[~sel] == g.weights[~sel]).all()
+    # duplicates: last weight wins on both arcs
+    w3 = weights_from_arc_updates(g, [u, u], [v, v], [4.0, 6.0])
+    assert (w3[sel] == np.float32(6.0)).all()
+    with pytest.raises(ValueError, match="structural delta"):
+        weights_from_arc_updates(g, [u], [u + 55], [1.0])
+    with pytest.raises(ValueError, match="not a valid"):
+        weights_from_arc_updates(g, [0], [0], [1.0])
+
+
+# ---------------------------------------------------------------------------
+# structural repair parity (bit-for-bit vs a full rebuild)
+# ---------------------------------------------------------------------------
+
+def _storm_parity_rounds(g, part, *, intra_bias, seed, num_epochs=4,
+                         intensity=0.03):
+    """Run closure-storm epochs through ``apply_structural``, asserting
+    bitwise parity against a from-scratch build every epoch.  Returns
+    the per-epoch ``(incremental, border_changed)`` flags, the latter
+    from an independent ``classify_structural`` of each epoch."""
+    builder = IncrementalBuilder()
+    builder.build_full(g, part)
+    flags = []
+    g_prev = g
+    for g_new, _ in closure_storm(g, part, num_epochs=num_epochs,
+                                  intensity=intensity,
+                                  intra_bias=intra_bias, seed=seed):
+        delta = classify_structural(g_prev, part, g_new)
+        labels, rep = builder.apply_structural(g_new, part, delta)
+        full = IncrementalBuilder().build_full(g_new, part)
+        np.testing.assert_array_equal(labels.table, full.table)
+        flags.append((rep["incremental"], delta.border_changed))
+        g_prev = g_new
+    return flags
+
+
+def test_structural_repair_parity_scoped_storm(grid):
+    g, part = grid
+    flags = _storm_parity_rounds(g, part, intra_bias=1.0, seed=17)
+    # side-street-only storms never move the border sets; the scoped
+    # repair engages (an epoch may still dirty every one of the 5 small
+    # districts via reopens — the all-dirty fallback is legitimate)
+    assert not any(bc for _, bc in flags)
+    assert any(inc for inc, _ in flags)
+
+
+def test_structural_repair_parity_with_border_churn(grid):
+    g, part = grid
+    # mixed storms fell highways too: the border sets move in some
+    # epochs and the repair must stay bit-for-bit through the honest
+    # full-rebuild fallback as well as the scoped path
+    flags = _storm_parity_rounds(g, part, intra_bias=0.6, seed=3,
+                                 intensity=0.05)
+    assert any(bc for _, bc in flags), "no border churn — weak test case"
+
+
+def test_structural_repair_parity_openings_and_reweights(grid):
+    g, part = grid
+    builder = IncrementalBuilder()
+    builder.build_full(g, part)
+    # brand-new edges (one promoting, one between existing borders)
+    # plus weight moves on survivors, in one delta
+    g2 = open_edges(g, [PROMOTE_PAIR[0], BORDER_PAIR[0]],
+                    [PROMOTE_PAIR[1], BORDER_PAIR[1]], [2.5, 3.5])
+    g2 = g2.with_weights(weights_from_arc_updates(
+        g2, [INTRA_EDGE[0]], [INTRA_EDGE[1]], [7.0]))
+    labels, rep = builder.apply_structural(g2, part)
+    full = IncrementalBuilder().build_full(g2, part)
+    np.testing.assert_array_equal(labels.table, full.table)
+    assert rep["border_changed"]          # the promotion forced it
+
+
+def test_apply_structural_same_topology_fresh_identity(grid):
+    g, part = grid
+    builder = IncrementalBuilder()
+    ref = builder.build_full(g, part)
+    eu, ev, ew = g.edge_list()
+    from repro.core import from_edges
+    g_same = from_edges(g.num_vertices, eu, ev, ew)   # new CSR identity
+    assert g_same.indptr is not g.indptr
+    labels, rep = builder.apply_structural(g_same, part)
+    assert rep["incremental"] and not rep["changed_rows"].any()
+    np.testing.assert_array_equal(labels.table, ref.table)
+
+
+def _parity_case():
+    """Shared by the in-process test and the 8-device subprocess: a
+    mixed storm parity run plus an end-to-end system check against
+    Dijkstra.  Returns the number of scoped epochs."""
+    g = grid_road_network(8, 8, seed=7)
+    part = bfs_grow_partition(g, 4, seed=0)
+    flags = _storm_parity_rounds(g, part, intra_bias=0.8, seed=5,
+                                 num_epochs=3)
+    system = EdgeSystem.deploy(g, part)
+    rng = np.random.default_rng(0)
+    for g_new, _ in closure_storm(g, part, num_epochs=2, intensity=0.03,
+                                  intra_bias=0.8, seed=5):
+        system.apply_topology_update(g_new)
+        ss = rng.integers(0, g.num_vertices, size=40)
+        ts = rng.integers(0, g.num_vertices, size=40)
+        got = system.query_loop(ss, ts)
+        exact = np.array([dijkstra(g_new, int(s))[int(t)]
+                          for s, t in zip(ss, ts)])
+        np.testing.assert_allclose(got, exact, rtol=1e-5)
+    return sum(1 for inc, bc in flags if inc and not bc)
+
+
+def test_system_exact_through_closure_storm():
+    assert _parity_case() >= 1
+
+
+@pytest.mark.slow
+def test_structural_repair_parity_eight_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import jax; assert len(jax.devices()) == 8;"
+         "import tests.test_topology_dynamic as m;"
+         "assert m._parity_case() >= 1;"
+         "print('OK8')"],
+        env=env, capture_output=True, text=True, timeout=500,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK8" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# closure-storm scenario invariants
+# ---------------------------------------------------------------------------
+
+def test_closure_storm_deterministic_and_accounted(grid):
+    g, part = grid
+
+    def run():
+        out = []
+        for gg, info in closure_storm(g, part, num_epochs=4,
+                                      intensity=0.03, seed=17):
+            out.append((gg.indptr.tobytes(), gg.indices.tobytes(),
+                        gg.weights.tobytes(), info["num_closed"],
+                        info["num_reopened"], info["pool"]))
+        return out
+
+    a, b = run(), run()
+    assert a == b                                     # byte-identical
+    closed = reopened = 0
+    for _, _, _, nc, nr, pool in a:
+        closed += nc
+        reopened += nr
+        assert pool == closed - reopened              # pool accounting
+
+
+def test_closure_storm_never_isolates_and_keeps_borders(grid):
+    g, part = grid
+    bm0 = border_mask(g, part)
+    for g_new, _ in closure_storm(g, part, num_epochs=4, intensity=0.05,
+                                  intra_bias=1.0, seed=2):
+        assert np.diff(g_new.indptr).min() >= 1       # degree guard
+        # side-street-only storms leave Definition-4 borders alone
+        np.testing.assert_array_equal(border_mask(g_new, part), bm0)
+
+
+def test_closure_storm_validation(grid):
+    g, part = grid
+    for kw in ({"intra_bias": 1.5}, {"reopen_frac": -0.1},
+               {"sites": 0}, {"sites": part.num_districts + 1}):
+        with pytest.raises(ValueError):
+            next(iter(closure_storm(g, part, **kw)))
+
+
+# ---------------------------------------------------------------------------
+# traffic scenarios: determinism + intensity calibration
+# ---------------------------------------------------------------------------
+
+def _scenario_digests(seed: int) -> dict:
+    import hashlib
+    g = grid_road_network(12, 12, seed=1)
+    part = bfs_grow_partition(g, 4, seed=0)
+    return {name: hashlib.sha256(
+        scenario_weights(name, g, part, np.random.default_rng(seed),
+                         0.05).tobytes()).hexdigest()
+        for name in ("rush_hour", "incident", "regional", "jitter")}
+
+
+def test_scenarios_byte_identical_across_processes():
+    """Same seed → byte-identical delta in a fresh interpreter: the
+    simulator epochs and the update benchmarks rely on scenario replay
+    being exact across machines and runs."""
+    here = _scenario_digests(seed=5)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import json, tests.test_topology_dynamic as m;"
+         "print(json.dumps(m._scenario_digests(seed=5)))"],
+        env=env, capture_output=True, text=True, timeout=300,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    import json
+    there = json.loads(out.stdout.splitlines()[-1])
+    assert here == there
+
+
+def test_scenario_intensity_pins_dirty_fraction():
+    """``intensity`` is approximately the dirty fraction of the
+    undirected edge set — the contract that lets benchmarks sweep delta
+    size uniformly across scenario kinds.  Edge-exact kinds pin tight;
+    region-growing kinds stop at the first cover ≥ intensity, so they
+    pin from below with a bounded overshoot."""
+    g = grid_road_network(24, 24, seed=3)
+    part = bfs_grow_partition(g, 8, seed=0)
+    num = g.num_edges
+    intensity = 0.05
+    for seed in (0, 1, 2):
+        for name, lo, hi in (("jitter", 0.045, 0.055),
+                             ("incident", 0.045, 0.055),
+                             ("rush_hour", 0.05, 0.15),
+                             ("regional", 0.05, 0.30)):
+            w2 = scenario_weights(name, g, part,
+                                  np.random.default_rng(seed), intensity)
+            frac = float((w2 != g.weights).sum()) / 2 / num
+            assert lo <= frac <= hi, (name, seed, frac)
+
+
+# ---------------------------------------------------------------------------
+# placement + rebalance planner
+# ---------------------------------------------------------------------------
+
+def test_edge_placement_blocked_move_and_totals():
+    p = EdgePlacement.blocked(8, 4)
+    np.testing.assert_array_equal(p.host_of, [0, 0, 1, 1, 2, 2, 3, 3])
+    assert p.version == 0 and p.num_districts == 8
+    np.testing.assert_array_equal(p.districts_of(1), [2, 3])
+    p2 = p.move(2, 3)
+    assert p2.version == 1 and p2.host_of[2] == 3
+    assert p.host_of[2] == 1                          # immutable original
+    assert p.key() != p2.key()
+    np.testing.assert_array_equal(
+        p.host_totals(np.arange(8.0)), [1.0, 5.0, 9.0, 13.0])
+    with pytest.raises(ValueError, match="host_of entries"):
+        EdgePlacement(np.array([0, 4], dtype=np.int32), num_hosts=4)
+
+
+def test_rebalance_planner_plans_converges_and_guards():
+    p = EdgePlacement.blocked(8, 4)
+    planner = RebalancePlanner(p, max_moves=2)
+    # balanced load: below the imbalance threshold → no plan
+    planner.observe_load(np.ones(8))
+    assert planner.plan() is None
+    # skew host 0 hot: the plan strictly shrinks the peak
+    planner.observe_load(np.array([40.0, 30.0, 0, 0, 0, 0, 0, 0]))
+    plan = planner.plan()
+    assert plan is not None and len(plan.moves) <= 2
+    assert plan.imbalance_after < plan.imbalance_before
+    assert plan.placement.version == p.version + 1
+    # committing and re-planning from the post-move state converges
+    # rather than oscillating
+    planner.commit(plan)
+    again = planner.plan()
+    assert again is None or again.imbalance_after < plan.imbalance_after
+    # zero-load districts are never worth moving
+    z = RebalancePlanner(EdgePlacement.blocked(4, 2), max_moves=4)
+    z.observe_load(np.array([10.0, 0.0, 0.0, 0.0]))
+    zp = z.plan()
+    assert zp is None or all(m.load > 0 for m in zp.moves)
+    with pytest.raises(ValueError):
+        RebalancePlanner(p, max_moves=0)
+    with pytest.raises(ValueError, match="wrong length"):
+        planner.observe_load(np.ones(3))
+
+
+def test_rebalance_planner_respects_byte_budget():
+    p = EdgePlacement.blocked(4, 2)
+    bts = np.array([100, 100, 100, 100], dtype=np.int64)
+    planner = RebalancePlanner(p, max_moves=2, byte_budget=250)
+    planner.observe_bytes(bts)
+    planner.observe_load(np.array([50.0, 40.0, 1.0, 1.0]))
+    plan = planner.plan()
+    if plan is not None:
+        assert (plan.host_bytes_after <= 250).all()
+    # an impossible budget blocks every move
+    tight = RebalancePlanner(p, max_moves=2, byte_budget=150)
+    tight.observe_bytes(bts)
+    tight.observe_load(np.array([50.0, 40.0, 1.0, 1.0]))
+    assert tight.plan() is None
+
+
+# ---------------------------------------------------------------------------
+# live migration: the system swap and the service counters
+# ---------------------------------------------------------------------------
+
+def test_migrate_swap_preserves_answers_and_bumps_version(grid):
+    g, part = grid
+    system = EdgeSystem.deploy(g, part)       # fresh: migrate mutates
+    m = part.num_districts
+    rng = np.random.default_rng(3)
+    ss = rng.integers(0, g.num_vertices, size=64)
+    ts = rng.integers(0, g.num_vertices, size=64)
+    before = system.query_loop(ss, ts)
+
+    planner = RebalancePlanner.for_system(system, num_hosts=2, max_moves=1)
+    assert (planner.district_bytes > 0).all()
+    assert (district_bytes_of(system) == planner.district_bytes).all()
+    load = np.ones(m)
+    load[planner.placement.districts_of(0)] = 30.0
+    planner.observe_load(load)
+    plan = planner.plan()
+    assert plan is not None
+    rep = system.migrate(plan)
+    assert rep["placement_version"] == 1
+    assert rep["moved_districts"] == [mv.district for mv in plan.moves]
+    assert system.placement is plan.placement
+    # only the routing moved: answers are bitwise unchanged
+    np.testing.assert_array_equal(system.query_loop(ss, ts), before)
+    svc = system.service(ServingPolicy())
+    np.testing.assert_array_equal(svc.distances(ss, ts), before)
+
+    with pytest.raises(ValueError, match="placement covers"):
+        system.migrate(EdgePlacement.blocked(m + 1, 2))
+
+
+def test_service_district_load_counter(grid):
+    g, part = grid
+    system = EdgeSystem.deploy(g, part)
+    svc = system.service(ServingPolicy())
+    rng = np.random.default_rng(8)
+    ss = rng.integers(0, g.num_vertices, size=50)
+    ts = rng.integers(0, g.num_vertices, size=50)
+    svc.submit(ss, ts)
+    expect = np.bincount(part.assignment[ss],
+                         minlength=part.num_districts)
+    np.testing.assert_array_equal(svc.district_load, expect)
+    svc.query(3, 40)                          # scalar path counts too
+    expect[part.assignment[3]] += 1
+    np.testing.assert_array_equal(svc.district_load, expect)
+    # padding dummies stay out of the load signal
+    real = np.zeros(50, dtype=bool)
+    real[:10] = True
+    svc2 = system.service(ServingPolicy())
+    svc2.submit(ss, ts, real=real)
+    assert svc2.district_load.sum() == 10
+
+
+# ---------------------------------------------------------------------------
+# migration under simulated live load
+# ---------------------------------------------------------------------------
+
+def test_simulated_migration_exactness_windows(grid):
+    g, part = grid
+    m = part.num_districts
+    placement = EdgePlacement.blocked(m, 2)
+    trace = make_trace(g, 2_000, 3_000.0, seed=5)
+    sched = UpdateSchedule(1e9, 0.0, 0.0, 0.0)    # no rebuild windows
+    migs = [MigrationEvent(1_500.0, 0, int(placement.host_of[0]), 1,
+                           copy_ms=400.0)]
+    results = {}
+    for mode in ("dual", "handoff"):
+        res = simulate_edge(trace, Topology(m), sched, part.assignment,
+                            lambda s, t: True, m,
+                            policy=ServingPolicy(migration=mode),
+                            placement=placement, migrations=migs)
+        assert res.migration_window_mask.any()
+        # the acceptance invariant: nothing non-exact OUTSIDE the window
+        assert not (res.nonexact_mask & ~res.migration_window_mask).any()
+        results[mode] = res
+    assert not results["dual"].nonexact_mask.any()
+    assert results["dual"].migration_stale_frac == 0.0
+    assert results["handoff"].migration_stale_frac > 0.0
+
+
+def test_simulator_legacy_path_unchanged(grid):
+    g, part = grid
+    m = part.num_districts
+    trace = make_trace(g, 500, 1_000.0, seed=1)
+    sched = UpdateSchedule(1e9, 0.0, 0.0, 0.0)
+    res = simulate_edge(trace, Topology(m), sched, part.assignment,
+                        lambda s, t: True, m)
+    assert res.migration_window_mask is None
+    assert res.nonexact_mask is None
+    assert res.migration_stale_frac == 0.0
+    with pytest.raises(ValueError, match="explicit placement"):
+        simulate_edge(trace, Topology(m), sched, part.assignment,
+                      lambda s, t: True, m,
+                      migrations=[MigrationEvent(1.0, 0, 0, 1)])
+
+
+def test_migrations_from_plan_maps_moves(grid):
+    g, part = grid
+    placement = EdgePlacement.blocked(part.num_districts, 2)
+    planner = RebalancePlanner(placement, max_moves=2)
+    load = np.ones(part.num_districts)
+    load[placement.districts_of(0)] = 25.0
+    planner.observe_load(load)
+    plan = planner.plan()
+    assert plan is not None
+    migs = migrations_from_plan(plan, t_ms=100.0, copy_ms=50.0)
+    assert len(migs) == len(plan.moves)
+    for ev, mv in zip(migs, plan.moves):
+        assert (ev.t_ms, ev.district, ev.src_host, ev.dst_host,
+                ev.copy_ms) == (100.0, mv.district, mv.src_host,
+                                mv.dst_host, 50.0)
